@@ -1,0 +1,88 @@
+"""Shared harness for the paper-figure benchmarks (§VI).
+
+Every figure benchmark prints CSV rows:
+    figure,series,step,test_accuracy
+plus a summary row  ``name,us_per_call,derived``  (derived = final accuracy)
+for benchmarks/run.py.
+
+Scale: the default is a CPU-sized rendition (the paper's exact d = 7850
+single-layer model, fewer devices/steps); ``FULL=1`` env restores the paper's
+M=25, B=1000, T=300 settings.  MNIST is replaced by the deterministic
+surrogate (DESIGN.md §7) — claims are validated in relative terms.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import OTAConfig
+from repro.data.synthetic import federated_split, make_classification
+from repro.train.paper_repro import run_federated
+
+FULL = bool(int(os.environ.get("FULL", "0")))
+
+
+@dataclass
+class Scale:
+    m: int = 25 if FULL else 10
+    b: int = 1000 if FULL else 400
+    n_train: int = 60000 if FULL else 8000
+    n_test: int = 10000 if FULL else 2000
+    steps: int = 300 if FULL else 30
+    amp_iters: int = 25 if FULL else 12
+    eval_every: int = 10 if FULL else 5
+    noise: float = 6.0          # surrogate difficulty: schemes separate
+    lr: float = 1e-3
+
+
+SCALE = Scale()
+
+
+def dataset(iid: bool = True, m: Optional[int] = None,
+            b: Optional[int] = None, seed: int = 3):
+    m = m or SCALE.m
+    b = b or SCALE.b
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=SCALE.n_train, n_test=SCALE.n_test, noise=SCALE.noise,
+        seed=seed)
+    xd, yd = federated_split(xtr, ytr, m=m, b=b, iid=iid, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+def ota(scheme: str, **kw) -> OTAConfig:
+    base = dict(scheme=scheme, s_frac=0.5, p_avg=500.0,
+                total_steps=SCALE.steps, projection="dense",
+                amp_iters=SCALE.amp_iters, mean_removal_steps=min(
+                    20, SCALE.steps // 3),
+                # k = s/4 recovers better than the paper's k = s/2 at our
+                # reduced M (union-support pressure on AMP); FULL keeps s/2
+                k_frac=0.5 if FULL else 0.25)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+def run_series(fig: str, series: str, dev_data, test_data, cfg: OTAConfig,
+               steps: Optional[int] = None, lr: Optional[float] = None,
+               rows: Optional[List[str]] = None) -> Dict:
+    (xd, yd), (xte, yte) = dev_data, test_data
+    steps = steps or SCALE.steps
+    t0 = time.time()
+    run = run_federated(xd, yd, xte, yte, cfg, steps=steps,
+                        lr=lr or SCALE.lr, eval_every=SCALE.eval_every)
+    dt = time.time() - t0
+    out_rows = rows if rows is not None else []
+    for i, acc in enumerate(run.accs):
+        step = min(i * SCALE.eval_every, steps - 1)
+        out_rows.append(f"{fig},{series},{step},{acc:.4f}")
+    return {"final_acc": run.accs[-1], "us_per_call": dt / steps * 1e6,
+            "rows": out_rows, "run": run}
+
+
+def emit(rows: List[str]) -> None:
+    print("figure,series,step,test_accuracy")
+    for r in rows:
+        print(r)

@@ -1,0 +1,21 @@
+"""Paper Fig. 2: test accuracy of all five schemes, IID and non-IID."""
+from benchmarks.common import SCALE, dataset, emit, ota, run_series
+
+
+def main(collect=None):
+    rows, summary = [], []
+    for iid, tag in ((True, "iid"), (False, "noniid")):
+        dev, test = dataset(iid=iid)
+        for scheme in ("ideal", "a_dsgd", "d_dsgd", "signsgd", "qsgd"):
+            r = run_series("fig2", f"{scheme}_{tag}", dev, test,
+                           ota(scheme), rows=rows)
+            summary.append((f"fig2_{scheme}_{tag}", r["us_per_call"],
+                            r["final_acc"]))
+    emit(rows)
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

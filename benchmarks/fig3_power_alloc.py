@@ -1,0 +1,25 @@
+"""Paper Fig. 3: D-DSGD power-allocation schedules (eq. 45) vs A-DSGD."""
+from benchmarks.common import dataset, emit, ota, run_series
+
+
+def main(collect=None):
+    rows, summary = [], []
+    dev, test = dataset(iid=True)
+    for sched in ("constant", "lh_stair", "lh_steps", "hl_steps"):
+        r = run_series("fig3", f"d_dsgd_{sched}", dev, test,
+                       ota("d_dsgd", p_avg=200.0, power_schedule=sched),
+                       rows=rows)
+        summary.append((f"fig3_d_dsgd_{sched}", r["us_per_call"],
+                        r["final_acc"]))
+    for scheme in ("a_dsgd", "ideal"):
+        r = run_series("fig3", scheme, dev, test, ota(scheme, p_avg=200.0),
+                       rows=rows)
+        summary.append((f"fig3_{scheme}", r["us_per_call"], r["final_acc"]))
+    emit(rows)
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

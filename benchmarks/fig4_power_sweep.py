@@ -1,0 +1,23 @@
+"""Paper Fig. 4: P-bar in {200, 1000} — A-DSGD robust, D-DSGD degrades."""
+from benchmarks.common import dataset, emit, ota, run_series
+
+
+def main(collect=None):
+    rows, summary = [], []
+    dev, test = dataset(iid=True)
+    for p in (200.0, 1000.0):
+        for scheme in ("a_dsgd", "d_dsgd"):
+            r = run_series("fig4", f"{scheme}_P{int(p)}", dev, test,
+                           ota(scheme, p_avg=p), rows=rows)
+            summary.append((f"fig4_{scheme}_P{int(p)}", r["us_per_call"],
+                            r["final_acc"]))
+    r = run_series("fig4", "ideal", dev, test, ota("ideal"), rows=rows)
+    summary.append(("fig4_ideal", r["us_per_call"], r["final_acc"]))
+    emit(rows)
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Fig. 5: channel bandwidth s in {d/2, 3d/10} — A-DSGD robust."""
+from benchmarks.common import dataset, emit, ota, run_series
+
+
+def main(collect=None):
+    rows, summary = [], []
+    dev, test = dataset(iid=True, m=10)
+    for s_frac, tag in ((0.5, "d2"), (0.3, "3d10")):
+        for scheme in ("a_dsgd", "d_dsgd"):
+            r = run_series("fig5", f"{scheme}_s{tag}", dev, test,
+                           ota(scheme, s_frac=s_frac), rows=rows)
+            summary.append((f"fig5_{scheme}_s{tag}", r["us_per_call"],
+                            r["final_acc"]))
+    emit(rows)
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 6: (M, B) scaling at fixed M*B, P-bar in {1, 500}."""
+from benchmarks.common import SCALE, dataset, emit, ota, run_series
+
+
+def main(collect=None):
+    rows, summary = [], []
+    total = 4000
+    for m in (5, 10):
+        b = total // m
+        dev, test = dataset(iid=True, m=m, b=b)
+        for p in (1.0, 500.0):
+            for scheme in ("a_dsgd", "d_dsgd"):
+                r = run_series("fig6", f"{scheme}_M{m}_P{int(p)}", dev, test,
+                               ota(scheme, p_avg=p, s_frac=0.25), rows=rows)
+                summary.append((f"fig6_{scheme}_M{m}_P{int(p)}",
+                                r["us_per_call"], r["final_acc"]))
+    emit(rows)
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline analysis (deliverable g): derive the three terms per
+(arch x shape x mesh) from the dry-run artifacts in results/dryrun/.
+
+  compute    = FLOPs / (chips x 197 TFLOP/s)
+  memory     = HBM bytes accessed / (chips x 819 GB/s)
+  collective = collective bytes / (chips x 50 GB/s link)
+
+Sources: memory/collective come from the compiled per-device module
+(cost_analysis 'bytes accessed'; HLO-parsed collective output bytes).
+FLOPs use an ANALYTIC workload model (6 N_active D + attention quadratic +
+the OTA encode/decode pipeline): XLA's cost_analysis counts lax.scan bodies
+ONCE (not x trip-count), so raw HLO FLOPs under-count scanned stacks — both
+numbers are reported; MODEL_FLOPS / FLOPs_used flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, active_param_count, get_config, ota_overrides
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def analytic_flops(arch_id: str, shape_id: str, kind: str,
+                   aggregator: Optional[str], m_devices: int = 16,
+                   n_shards: int = 16, n_chips: int = 256) -> Dict[str, float]:
+    """Global FLOPs model. Returns dict with model/train/ota components."""
+    cfg = get_config(arch_id)
+    shape = INPUT_SHAPES[shape_id]
+    n_active = active_param_count(cfg)
+    B, L = shape.global_batch, shape.seq_len
+    d_attn = cfg.n_heads * cfg.resolved_head_dim
+    n_attn = sum(1 for k in cfg.blocks() if k in ("attn", "swa", "moe"))
+    if cfg.shared_attn_every:
+        n_attn += cfg.n_layers // cfg.shared_attn_every
+    if kind == "train":
+        tokens = B * L
+        fwd = 2.0 * n_active * tokens + 2.0 * B * L * L * d_attn * n_attn
+        model = 3.0 * fwd                 # fwd + 2x bwd
+        total = model * (4.0 / 3.0)       # block remat ~ one extra fwd
+        ota = 0.0
+        if aggregator == "a_dsgd":
+            oc = ota_overrides(arch_id)
+            d = active_param_count(cfg) if cfg.moe is None else \
+                sum(x.size for x in [])  # placeholder, replaced below
+            d = _param_total(cfg)
+            s_block = oc.s_frac * oc.block_size
+            encode = 12.0 * d * s_block * m_devices          # gen + matmul
+            decode = (10.0 + 4.0 * oc.amp_iters) * d * s_block \
+                * (n_chips / n_shards)   # replicated across data rows
+            ota = encode + decode
+        return {"model_flops": 6.0 * n_active * tokens, "total": total + ota,
+                "ota": ota}
+    if kind == "prefill":
+        tokens = B * L
+        fwd = 2.0 * n_active * tokens + 2.0 * B * L * L * d_attn * n_attn
+        return {"model_flops": 2.0 * n_active * tokens, "total": fwd,
+                "ota": 0.0}
+    # decode: one token, KV-cache attention reads
+    fwd = 2.0 * n_active * B + 4.0 * B * L * d_attn * n_attn
+    return {"model_flops": 2.0 * n_active * B, "total": fwd, "ota": 0.0}
+
+
+def _param_total(cfg) -> float:
+    from repro.configs import approx_param_count
+    return float(approx_param_count(cfg))
+
+
+def dominant_advice(dom: str, info: Dict) -> str:
+    if dom == "collective":
+        return ("shrink psum payload (lower s_frac / fewer OTA replicas) or "
+                "overlap the MAC all-reduce with backward compute")
+    if dom == "memory":
+        return ("cut HBM traffic: fuse EF+sparsify (Pallas), drop the "
+                "flatten/unflatten resharding via leafwise aggregation, "
+                "bf16 Delta")
+    return ("reduce AMP iterations / shard the redundant PS decode across "
+            "data rows; MXU-align projection tiles")
+
+
+def load_rows(mesh_filter: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            info = json.load(f)
+        if "skipped" in info:
+            info["tag"] = os.path.basename(path)[:-5]
+            rows.append(info)
+            continue
+        if mesh_filter and info["mesh"] != mesh_filter:
+            continue
+        n = info["n_chips"]
+        af = analytic_flops(info["arch"], info["shape"], info["kind"],
+                            info.get("aggregator"), n_chips=n)
+        t_comp = af["total"] / (n * PEAK_FLOPS_BF16)
+        t_mem = info["bytes_accessed"] / HBM_BW          # per-device already
+        t_coll = info["collective_bytes"]["total"] / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        rows.append({
+            **info,
+            "tag": os.path.basename(path)[:-5],
+            "flops_analytic": af["total"],
+            "model_flops": af["model_flops"],
+            "ota_flops": af["ota"],
+            "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+            "dominant": dom,
+            "useful_ratio": af["model_flops"] / max(af["total"], 1.0),
+            "advice": dominant_advice(dom, info),
+        })
+    return rows
+
+
+def main(collect=None):
+    rows = load_rows()
+    hdr = ("arch,shape,mesh,variant,aggregator,t_compute_s,t_memory_s,"
+           "t_collective_s,dominant,model/total_flops,temp_GiB_per_dev")
+    print(hdr)
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['tag']},SKIPPED({r['skipped'][:40]})")
+            continue
+        tmp = (r["mem_per_device"]["temp_bytes"] or 0) / 2**30
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['variant']},"
+              f"{r.get('aggregator')},{r['t_compute']:.4f},"
+              f"{r['t_memory']:.4f},{r['t_collective']:.4f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{tmp:.2f}")
+        if collect is not None:
+            collect.append((f"roofline_{r['tag']}", 0.0, r["dominant"]))
+    out = os.path.join(RESULTS, "..", "roofline_table.json")
+    with open(out, "w") as f:
+        json.dump([{k: v for k, v in r.items() if k != "advice"}
+                   for r in rows], f, indent=1, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one harness per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV summary at the end (derived = final
+test accuracy for the figure benchmarks, dominant roofline term for the
+dry-run table rows).  FULL=1 env restores paper-scale settings.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (convergence_bound, fig2_schemes, fig3_power_alloc,
+                            fig4_power_sweep, fig5_bandwidth, fig6_devices,
+                            fig7_s_tradeoff, roofline)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = {
+        "fig2": fig2_schemes.main,
+        "fig3": fig3_power_alloc.main,
+        "fig4": fig4_power_sweep.main,
+        "fig5": fig5_bandwidth.main,
+        "fig6": fig6_devices.main,
+        "fig7": fig7_s_tradeoff.main,
+        "thm1": convergence_bound.main,
+        "roofline": roofline.main,
+    }
+    summary = []
+    for name, fn in benches.items():
+        if only and name != only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn(collect=summary)
+        print(f"[{name}] {time.time() - t0:.1f}s", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in summary:
+        if isinstance(derived, float):
+            print(f"{name},{us:.1f},{derived:.4f}")
+        else:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Paper §VI reproduction driver: pick a figure and render its data as CSV.
+
+Run:  PYTHONPATH=src python examples/paper_repro.py [fig2|fig3|...|fig7|thm1]
+      FULL=1 ... for the paper-scale settings (M=25, B=1000, T=300).
+"""
+import sys
+
+from benchmarks import run as bench_run
+
+if __name__ == "__main__":
+    sys.argv = ["paper_repro"] + (sys.argv[1:] or ["fig2"])
+    bench_run.main()

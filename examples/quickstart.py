@@ -1,0 +1,30 @@
+"""Quickstart: federated over-the-air SGD in ~40 lines.
+
+Ten simulated edge devices collaboratively train the paper's single-layer
+classifier over a bandwidth-limited Gaussian MAC with A-DSGD (analog
+over-the-air aggregation), and we compare against the error-free bound.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.base import OTAConfig
+from repro.data.synthetic import federated_split, make_classification
+from repro.train.paper_repro import run_federated
+
+# 1) data: 10 devices x 400 local samples (MNIST-surrogate, offline)
+(x_train, y_train), (x_test, y_test) = make_classification(
+    n_train=8000, n_test=2000, noise=6.0, seed=3)
+x_dev, y_dev = federated_split(x_train, y_train, m=10, b=400, iid=True)
+
+# 2) the channel: s = d/2 uses of a Gaussian MAC, average power 500,
+#    A-DSGD = error feedback + top-k + compressive projection + AMP at the PS
+adsgd = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                  sigma2=1.0, total_steps=40, projection="dense",
+                  amp_iters=20, mean_removal_steps=10)
+ideal = OTAConfig(scheme="ideal", total_steps=40)
+
+# 3) train
+for name, cfg in (("error-free shared link", ideal), ("A-DSGD", adsgd)):
+    run = run_federated(x_dev, y_dev, x_test, y_test, cfg, steps=40,
+                        lr=1e-3, eval_every=10)
+    print(f"{name:24s} accuracy trajectory: "
+          + " ".join(f"{a:.3f}" for a in run.accs))

@@ -1,0 +1,7 @@
+"""repro: over-the-air distributed SGD (A-DSGD / D-DSGD) as a JAX framework.
+
+Reproduction of Amiri & Gunduz, "Machine Learning at the Wireless Edge:
+Distributed Stochastic Gradient Descent Over-the-Air" (IEEE TSP 2020),
+plus a multi-architecture distributed training/serving substrate.
+"""
+__version__ = "1.0.0"

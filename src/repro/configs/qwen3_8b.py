@@ -1,0 +1,10 @@
+"""Qwen3-8B — dense GQA with qk-norm. [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1000000.0,
+    citation="hf:Qwen/Qwen3-8B",
+)

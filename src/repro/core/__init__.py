@@ -1,0 +1,4 @@
+from repro.core.aggregators import Aggregator, SCHEMES, make_aggregator  # noqa: F401
+from repro.core.projection import (  # noqa: F401
+    BlockedProjector, DenseProjector, make_projector,
+)

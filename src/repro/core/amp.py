@@ -1,0 +1,151 @@
+"""Approximate message passing (AMP) reconstruction at the PS (paper §IV, [31]).
+
+Soft-threshold AMP for y = A x + z with x ~ k-sparse:
+
+    r_t   = x_t + A^T z_t
+    x_t+1 = soft(r_t, tau_t),   tau_t = mult * ||z_t|| / sqrt(s)
+    z_t+1 = y - A x_t+1 + z_t * (||x_t+1||_0 / s)      (Onsager correction)
+
+Lemma 1 of the paper: the effective observation becomes x + sigma_tau * w with
+sigma_tau decreasing monotonically — the tests verify this contraction on
+synthetic k-sparse signals.
+
+The blocked variant runs an independent AMP per projection block (the
+block-diagonal A factorises the problem) — fully batched, shardable along d.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_threshold(x: jnp.ndarray, tau) -> jnp.ndarray:
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
+
+
+def _ls_rescale(x: jnp.ndarray, ax: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Debias the soft-threshold shrinkage: scale x so A x best matches y."""
+    num = jnp.vdot(ax, y)
+    den = jnp.maximum(jnp.vdot(ax, ax), 1e-12)
+    return x * (num / den)
+
+
+def amp_decode_dense(y: jnp.ndarray, A: jnp.ndarray, iters: int = 20,
+                     threshold_mult: float = 1.3,
+                     debias: bool = True) -> jnp.ndarray:
+    """Recover x (d,) from y (s,) with the dense measurement matrix A (s,d)."""
+    s, d = A.shape
+
+    def body(_, carry):
+        x, z = carry
+        sigma_hat = jnp.linalg.norm(z) / jnp.sqrt(s)
+        r = x + A.T @ z
+        x_new = soft_threshold(r, threshold_mult * sigma_hat)
+        onsager = z * (jnp.sum(x_new != 0.0) / s)
+        z_new = y - A @ x_new + onsager
+        return x_new, z_new
+
+    x0 = jnp.zeros((d,), y.dtype)
+    x, _ = jax.lax.fori_loop(0, iters, body, (x0, y))
+    if debias:
+        x = _ls_rescale(x, A @ x, y)
+    return x
+
+
+def amp_decode_blocked(yb: jnp.ndarray, projector, iters: int = 20,
+                       threshold_mult: float = 1.3,
+                       debias: bool = True) -> jnp.ndarray:
+    """Per-block AMP. yb: (n_blocks, s_block) -> flat (d,) estimate.
+
+    All matvecs go through the projector (on-the-fly A; Pallas on TPU), so
+    each AMP iteration is two batched kernel launches + pointwise math.
+    """
+    n_blocks, s_block = yb.shape
+    c = projector.block_size
+
+    def body(_, carry):
+        xb, zb = carry
+        sigma_hat = jnp.linalg.norm(zb, axis=1, keepdims=True) / jnp.sqrt(
+            jnp.float32(s_block))
+        rb = xb + projector.project_t_blocks(zb)
+        xb_new = soft_threshold(rb, threshold_mult * sigma_hat)
+        onsager = zb * (jnp.sum(xb_new != 0.0, axis=1, keepdims=True) / s_block)
+        zb_new = yb - projector.project_blocks(xb_new) + onsager
+        return xb_new, zb_new
+
+    x0 = jnp.zeros((n_blocks, c), yb.dtype)
+    xb, _ = jax.lax.fori_loop(0, iters, body, (x0, yb))
+    if debias:
+        axb = projector.project_blocks(xb)
+        num = jnp.sum(axb * yb, axis=1, keepdims=True)
+        den = jnp.maximum(jnp.sum(axb * axb, axis=1, keepdims=True), 1e-12)
+        xb = xb * (num / den)
+    return projector.from_blocks(xb)
+
+
+def amp_decode_blocked_scan(yb: jnp.ndarray, projector, iters: int = 20,
+                            threshold_mult: float = 1.3,
+                            debias: bool = True) -> jnp.ndarray:
+    """Chunked-scan AMP for large n_blocks: each A chunk is generated ONCE
+    and all AMP iterations for its blocks run against it inside the scan
+    body (blocks are independent sub-problems under the block-diagonal A).
+    A-generation cost is amortised over the iterations — the structure the
+    Pallas kernel realises in VMEM on TPU."""
+    from repro.kernels import ref
+    n_blocks, s_block = yb.shape
+    c = projector.block_size
+    ni = projector.chunk_blocks
+    pad = (-n_blocks) % ni
+    yb_p = jnp.pad(yb, ((0, pad), (0, 0)))
+    n_outer = (n_blocks + pad) // ni
+    ys = yb_p.reshape(n_outer, ni, s_block)
+    ids = jnp.arange(n_outer * ni, dtype=jnp.uint32).reshape(n_outer, ni)
+
+    def gen(b):
+        return ref.block_matrix_ref(projector.seed, b, s_block, c,
+                                    projector.rademacher)
+
+    def chunk_amp(_, inp):
+        ids_c, y_c = inp
+        A = jax.vmap(gen)(ids_c)                     # (ni, s, c)
+
+        def body(_, carry):
+            x, z = carry
+            sigma_hat = jnp.linalg.norm(z, axis=1, keepdims=True) / jnp.sqrt(
+                jnp.float32(s_block))
+            r = x + jnp.einsum("isc,is->ic", A, z)
+            x_new = soft_threshold(r, threshold_mult * sigma_hat)
+            onsager = z * (jnp.sum(x_new != 0.0, axis=1, keepdims=True)
+                           / s_block)
+            z_new = y_c - jnp.einsum("isc,ic->is", A, x_new) + onsager
+            return x_new, z_new
+
+        x0 = jnp.zeros((ni, c), y_c.dtype)
+        x, _ = jax.lax.fori_loop(0, iters, body, (x0, y_c))
+        if debias:
+            ax = jnp.einsum("isc,ic->is", A, x)
+            num = jnp.sum(ax * y_c, axis=1, keepdims=True)
+            den = jnp.maximum(jnp.sum(ax * ax, axis=1, keepdims=True), 1e-12)
+            x = x * (num / den)
+        return None, x
+
+    _, xs = jax.lax.scan(chunk_amp, None, (ids, ys))
+    xb = xs.reshape(-1, c)[:n_blocks]
+    return projector.from_blocks(xb)
+
+
+def amp_decode(y_flat: jnp.ndarray, projector, iters: int = 20,
+               threshold_mult: float = 1.3) -> jnp.ndarray:
+    """Dispatch on projector type; y_flat has projector.out_dim entries."""
+    from repro.core.projection import BlockedProjector, DenseProjector
+    if isinstance(projector, DenseProjector):
+        return amp_decode_dense(y_flat, projector.matrix(), iters,
+                                threshold_mult)
+    assert isinstance(projector, BlockedProjector)
+    yb = y_flat.reshape(projector.n_blocks, projector.s_block)
+    if not projector.use_kernel and projector.n_blocks > projector.chunk_blocks:
+        return amp_decode_blocked_scan(yb, projector, iters, threshold_mult)
+    return amp_decode_blocked(yb, projector, iters, threshold_mult)

@@ -1,0 +1,90 @@
+"""The Gaussian MAC and the analog frame layout (paper §II, §IV, §IV-A).
+
+Frame layout (static length = s_tilde + 2, covering both §IV variants):
+
+    x_m = [ sqrt(a) * (g_tilde - mu * 1),  sqrt(a) * mu,  sqrt(a) ]
+
+with mu = mean(g_tilde) when mean-removal is active (paper: the first ~20
+iterations) and mu = 0 otherwise — in which case the layout degenerates to
+the basic scheme of eq. (12)-(14) at the cost of one idle channel use, which
+keeps the frame shape static under jit (the active/inactive switch is traced).
+
+    alpha = P_t / (||g_tilde||^2 - (s_tilde - 1) * mu^2 + 1)      (eq. 22)
+          = P_t / (||g_tilde||^2 + 1)            when mu = 0      (eq. 13)
+
+PS-side normalisation (eq. 25 / eq. 18):
+
+    y_body = (y[:s_tilde] + y[s_tilde] * 1) / y[s_tilde + 1]
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_frame(g_tilde: jnp.ndarray, p_t, use_mean_removal) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the per-device channel frame. Returns (frame, alpha).
+
+    use_mean_removal: traced bool/0-1 scalar.
+    """
+    s_tilde = g_tilde.shape[-1]
+    use = jnp.asarray(use_mean_removal, g_tilde.dtype)
+    mu = use * jnp.mean(g_tilde)
+    energy = jnp.sum(g_tilde * g_tilde) - (s_tilde - 1) * mu * mu + 1.0
+    alpha = jnp.asarray(p_t, g_tilde.dtype) / jnp.maximum(energy, 1e-12)
+    ra = jnp.sqrt(alpha)
+    frame = jnp.concatenate([ra * (g_tilde - mu),
+                             jnp.stack([ra * mu, ra])])
+    return frame, alpha
+
+
+def frame_power(frame: jnp.ndarray) -> jnp.ndarray:
+    """||x_m||^2 — tests assert == P_t (paper eq. 12/21)."""
+    return jnp.sum(frame * frame)
+
+
+def awgn(key: jnp.ndarray, shape, sigma2: float, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.sqrt(jnp.asarray(sigma2, dtype)) * jax.random.normal(key, shape, dtype)
+
+
+def mac_sum(frames: jnp.ndarray, key: jnp.ndarray, sigma2: float) -> jnp.ndarray:
+    """Simulation path: y = sum_m x_m + z  over a leading device axis."""
+    y = jnp.sum(frames, axis=0)
+    return y + awgn(key, y.shape, sigma2, y.dtype)
+
+
+def ps_normalize(y: jnp.ndarray, use_mean_removal) -> jnp.ndarray:
+    """Recover the PS observation body (eq. 18 / eq. 25)."""
+    body, mu_slot, scale_slot = y[:-2], y[-2], y[-1]
+    use = jnp.asarray(use_mean_removal, y.dtype)
+    scale = jnp.where(jnp.abs(scale_slot) > 1e-12, scale_slot, 1.0)
+    return (body + use * mu_slot) / scale
+
+
+# ---------------------------------------------------------------------------
+# fading MAC (beyond-paper: the §II extension realised in the follow-up [34])
+# ---------------------------------------------------------------------------
+
+
+def rayleigh_gains(key: jnp.ndarray, m: int) -> jnp.ndarray:
+    """|h_m| for a flat Rayleigh-fading block: |CN(0,1)| magnitudes."""
+    re, im = jax.random.normal(key, (2, m)) / jnp.sqrt(2.0)
+    return jnp.sqrt(re * re + im * im)
+
+
+def truncated_inversion_power(h: jnp.ndarray, threshold: float = 0.3):
+    """Truncated channel inversion (follow-up [34] §III).
+
+    Devices with |h_m| below the truncation threshold stay silent this
+    round (inverting a deep fade would blow the power budget); the rest
+    pre-scale by 1/h_m so their signals superpose coherently at the PS.
+    Inversion costs transmit power: under the per-round constraint
+    ||x_m||^2 <= P_t the usable *received* power becomes P_t * h_m^2.
+    Returns (received-power factor h^2 * active, participation mask) —
+    the frame math is then the AWGN pipeline with a per-device P_t scale,
+    and the y_s scale slot absorbs the resulting alpha_m spread (eq. 18).
+    """
+    active = h >= threshold
+    return jnp.where(active, h * h, 0.0), active

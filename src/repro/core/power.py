@@ -1,0 +1,43 @@
+"""Per-iteration transmit-power schedules P_t (paper §III Remark 1, eq. 45).
+
+All schedules satisfy the average-power constraint (1/T) sum_t P_t <= P_bar.
+Schedules are pure functions of (t, T, p_avg) so they can be evaluated inside
+jit (t traced) or on the host (numpy) when precomputing bit budgets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+SCHEDULES = ("constant", "lh_stair", "lh_steps", "hl_steps")
+
+
+def power_at(t, total_steps: int, p_avg: float, schedule: str = "constant"):
+    """P_t for iteration t (0-based). Works on traced or numpy scalars."""
+    T = total_steps
+    xp = jnp if not isinstance(t, (int, np.integer, np.ndarray)) else np
+    if schedule == "constant":
+        return xp.full_like(xp.asarray(t, xp.float32), p_avg) * 1.0
+    if schedule == "lh_stair":
+        # linear 0.5*P .. 1.5*P  (paper eq. 45a with P=200: 100 -> 300)
+        frac = xp.asarray(t, xp.float32) / max(T - 1, 1)
+        return p_avg * (0.5 + frac)
+    third = max(T // 3, 1)
+    idx = xp.minimum(xp.asarray(t) // third, 2)
+    if schedule == "lh_steps":
+        levels = xp.asarray([0.5, 1.0, 1.5], xp.float32) * p_avg
+    elif schedule == "hl_steps":
+        levels = xp.asarray([1.5, 1.0, 0.5], xp.float32) * p_avg
+    else:
+        raise ValueError(f"unknown power schedule {schedule!r}")
+    return levels[idx]
+
+
+def schedule_array(total_steps: int, p_avg: float, schedule: str) -> np.ndarray:
+    """Host-side P_t for t = 0..T-1 (used to precompute digital bit budgets)."""
+    return np.asarray([float(power_at(np.int64(t), total_steps, p_avg, schedule))
+                       for t in range(total_steps)], np.float64)
+
+
+def verify_average_power(ps: np.ndarray, p_avg: float, tol: float = 1e-6) -> bool:
+    return float(ps.mean()) <= p_avg * (1 + tol)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    TokenStream, federated_split, make_classification,
+)

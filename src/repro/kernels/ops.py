@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels with jnp fallbacks.
+
+``use_kernel=True`` routes through pl.pallas_call (interpret mode on CPU,
+compiled Mosaic on TPU); ``use_kernel=False`` uses the pure-jnp oracle path,
+which XLA fuses reasonably and which is what the multi-pod dry-run lowers
+(Mosaic kernels do not lower on the CPU backend used for dry-runs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ef_sparsify import ef_sparsify_pallas
+from repro.kernels.ota_project import ota_project_pallas, ota_project_t_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "s_block", "rademacher",
+                                             "use_kernel"))
+def ota_project(x: jnp.ndarray, *, seed: int, s_block: int,
+                rademacher: bool = True, use_kernel: bool = False):
+    """Blocked forward projection. x: (n_blocks, c) -> (n_blocks, s_block)."""
+    if use_kernel:
+        return ota_project_pallas(x, seed, s_block, rademacher,
+                                  interpret=_INTERPRET)
+    return ref.ota_project_ref(x, seed, s_block, rademacher)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "c", "rademacher",
+                                             "use_kernel"))
+def ota_project_t(y: jnp.ndarray, *, seed: int, c: int,
+                  rademacher: bool = True, use_kernel: bool = False):
+    """Blocked transpose projection. y: (n_blocks, s_block) -> (n_blocks, c)."""
+    if use_kernel:
+        return ota_project_t_pallas(y, seed, c, rademacher,
+                                    interpret=_INTERPRET)
+    return ref.ota_project_t_ref(y, seed, c, rademacher)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def ef_sparsify(g: jnp.ndarray, delta: jnp.ndarray, tau, *,
+                use_kernel: bool = False):
+    """Fused error-feedback + threshold sparsify. Returns (g_sp, new_delta)."""
+    if use_kernel:
+        return ef_sparsify_pallas(g, delta, jnp.asarray(tau),
+                                  interpret=_INTERPRET)
+    return ref.ef_sparsify_ref(g, delta, jnp.asarray(tau))

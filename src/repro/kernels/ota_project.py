@@ -1,0 +1,133 @@
+"""Pallas TPU kernels for the on-the-fly blocked compressive projection.
+
+The paper (§IV) projects each device's sparsified gradient with a shared
+pseudo-random matrix ``A``.  At framework scale A cannot live in HBM
+(s x d = O(1e20) entries for a 100B model), so these kernels generate each
+VMEM tile of A from a counter-based hash (see kernels/ref.py) *inside* the
+matmul kernel: HBM traffic is O(d + s) and A never exists.
+
+TPU adaptation notes (DESIGN.md §4): MXU-aligned tiles (multiples of 128 on
+the contracting/lane dims), VPU generates the next A tile's entries from
+integer hashes while the MXU consumes the previous one (software pipelining
+by the Mosaic compiler), Rademacher entries (one hash + sign) instead of
+Box-Muller Gaussians.
+
+Kernels are validated in interpret mode against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _GOLDEN, _M1, _M2
+
+# ---------------------------------------------------------------------------
+# in-kernel hash (identical math to ref.splitmix32 / ref.hash3)
+# ---------------------------------------------------------------------------
+
+
+def _splitmix32(x):
+    x = x + _GOLDEN
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 15)
+    return x
+
+
+def _tile_A(seed: int, block, row0, col0, s_tile: int, c_tile: int,
+            s_block: int, rademacher: bool):
+    """Generate the (s_tile, c_tile) tile of A_block starting at (row0, col0)."""
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (s_tile, c_tile), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (s_tile, c_tile), 1)
+    h = _splitmix32(jnp.uint32(seed) ^ block.astype(jnp.uint32))
+    h = _splitmix32(h ^ rows)
+    h = _splitmix32(h ^ cols)
+    scale = jnp.float32(1.0 / (s_block ** 0.5))
+    if rademacher:
+        sign = 1.0 - 2.0 * (h >> 31).astype(jnp.float32)
+        return sign * scale
+    h2 = _splitmix32(h ^ jnp.uint32(0xDEADBEEF))
+    u1 = (h.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+    u2 = (h2.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return z * scale
+
+
+# ---------------------------------------------------------------------------
+# forward projection: y[b] = A_b @ x[b]
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, y_ref, *, seed, s_tile, s_block, c, rademacher):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    A = _tile_A(seed, b, (i * s_tile).astype(jnp.uint32), jnp.uint32(0),
+                s_tile, c, s_block, rademacher)
+    x = x_ref[0, :]                     # (c,)
+    y_ref[0, :] = A @ x                  # (s_tile,)
+
+
+def ota_project_pallas(x: jnp.ndarray, seed: int, s_block: int,
+                       rademacher: bool = True, s_tile: int | None = None,
+                       interpret: bool = True) -> jnp.ndarray:
+    """x: (n_blocks, c) float32 -> y: (n_blocks, s_block) float32."""
+    n_blocks, c = x.shape
+    if s_tile is None:
+        # keep the A tile under ~4 MiB of VMEM, MXU-aligned when possible
+        s_tile = max(1, min(s_block, (4 * 1024 * 1024 // 4) // max(c, 1)))
+        while s_block % s_tile:
+            s_tile -= 1
+    assert s_block % s_tile == 0
+    grid = (n_blocks, s_block // s_tile)
+    kern = functools.partial(_fwd_kernel, seed=seed, s_tile=s_tile,
+                             s_block=s_block, c=c, rademacher=rademacher)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, c), lambda b, i: (b, 0))],
+        out_specs=pl.BlockSpec((1, s_tile), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, s_block), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# transpose projection: r[b] = A_b^T @ y[b]   (AMP's adjoint step)
+# ---------------------------------------------------------------------------
+
+
+def _t_kernel(y_ref, o_ref, *, seed, c_tile, s_block, rademacher):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    A = _tile_A(seed, b, jnp.uint32(0), (j * c_tile).astype(jnp.uint32),
+                s_block, c_tile, s_block, rademacher)   # (s_block, c_tile)
+    y = y_ref[0, :]                      # (s_block,)
+    o_ref[0, :] = y @ A                  # (c_tile,)
+
+
+def ota_project_t_pallas(y: jnp.ndarray, seed: int, c: int,
+                         rademacher: bool = True, c_tile: int | None = None,
+                         interpret: bool = True) -> jnp.ndarray:
+    """y: (n_blocks, s_block) float32 -> (n_blocks, c) float32."""
+    n_blocks, s_block = y.shape
+    if c_tile is None:
+        c_tile = max(1, min(c, (4 * 1024 * 1024 // 4) // max(s_block, 1)))
+        while c % c_tile:
+            c_tile -= 1
+    assert c % c_tile == 0
+    grid = (n_blocks, c // c_tile)
+    kern = functools.partial(_t_kernel, seed=seed, c_tile=c_tile,
+                             s_block=s_block, rademacher=rademacher)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, s_block), lambda b, j: (b, 0))],
+        out_specs=pl.BlockSpec((1, c_tile), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, c), jnp.float32),
+        interpret=interpret,
+    )(y.astype(jnp.float32))

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The measurement matrix A of the paper's compressive projection is never
+materialised at framework scale: entries are generated from a counter-based
+integer hash of ``(seed, block, row, col)``.  The SAME hash is implemented
+here (pure jnp, the test oracle) and inside the Pallas kernels — kernel
+correctness is asserted as exact/allclose agreement with these functions.
+
+Entry distributions:
+  * ``rademacher``:  +-1/sqrt(s_block)     (subgaussian, kernel default)
+  * gaussian:        N(0, 1/s_block) via Box-Muller from two hash draws
+                     (paper-faithful; used by the dense/jnp paths)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_M1 = np.uint32(0x21F0AAAD)
+_M2 = np.uint32(0x735A2D97)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 finalizer; uint32 -> uint32 (wrapping arithmetic)."""
+    x = x.astype(jnp.uint32)
+    x = x + _GOLDEN
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 15)
+    return x
+
+
+def hash3(seed, block, row, col) -> jnp.ndarray:
+    """Chained hash of three coordinates (avoids 64-bit flat indices)."""
+    h = splitmix32(jnp.uint32(seed) ^ jnp.asarray(block, jnp.uint32))
+    h = splitmix32(h ^ jnp.asarray(row, jnp.uint32))
+    h = splitmix32(h ^ jnp.asarray(col, jnp.uint32))
+    return h
+
+
+def _uniform01(h: jnp.ndarray) -> jnp.ndarray:
+    # (h + 0.5) / 2^32 in (0, 1)
+    return (h.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+
+
+def block_matrix_ref(seed: int, block: jnp.ndarray, s_block: int, c: int,
+                     rademacher: bool = True) -> jnp.ndarray:
+    """Oracle for one projection block A_b of shape (s_block, c)."""
+    rows = jnp.arange(s_block, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(c, dtype=jnp.uint32)[None, :]
+    h = hash3(seed, block, rows, cols)
+    scale = jnp.float32(1.0 / np.sqrt(s_block))
+    if rademacher:
+        sign = 1.0 - 2.0 * (h >> 31).astype(jnp.float32)
+        return sign * scale
+    # Box-Muller from two decorrelated hashes
+    h2 = splitmix32(h ^ jnp.uint32(0xDEADBEEF))
+    u1 = _uniform01(h)
+    u2 = _uniform01(h2)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return z * scale
+
+
+def ota_project_ref(x: jnp.ndarray, seed: int, s_block: int,
+                    rademacher: bool = True) -> jnp.ndarray:
+    """Oracle forward projection. x: (n_blocks, c) -> y: (n_blocks, s_block)."""
+    n_blocks, c = x.shape
+
+    def one(b, xb):
+        A = block_matrix_ref(seed, b, s_block, c, rademacher)
+        return A @ xb
+
+    blocks = jnp.arange(n_blocks, dtype=jnp.uint32)
+    return jnp.stack([one(blocks[i], x[i]) for i in range(n_blocks)]) \
+        if n_blocks <= 8 else _vmapped(one, blocks, x)
+
+
+def _vmapped(fn, blocks, x):
+    import jax
+    return jax.vmap(fn)(blocks, x)
+
+
+def ota_project_t_ref(y: jnp.ndarray, seed: int, c: int,
+                      rademacher: bool = True) -> jnp.ndarray:
+    """Oracle transpose projection. y: (n_blocks, s_block) -> (n_blocks, c)."""
+    n_blocks, s_block = y.shape
+
+    def one(b, yb):
+        A = block_matrix_ref(seed, b, s_block, c, rademacher)
+        return A.T @ yb
+
+    import jax
+    return jax.vmap(one)(jnp.arange(n_blocks, dtype=jnp.uint32), y)
+
+
+def ef_sparsify_ref(g: jnp.ndarray, delta: jnp.ndarray, tau: jnp.ndarray):
+    """Oracle fused error-feedback + threshold sparsification.
+
+    g_ec = g + delta ; keep entries with |g_ec| >= tau ; residual -> new delta.
+    Returns (g_sp, new_delta).
+    """
+    g_ec = g + delta
+    keep = jnp.abs(g_ec) >= tau
+    g_sp = jnp.where(keep, g_ec, 0.0)
+    return g_sp, g_ec - g_sp

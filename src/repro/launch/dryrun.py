@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+with ShapeDtypeStruct stand-ins (no allocation), print memory/cost analysis,
+parse collective bytes from the compiled HLO, and save JSON for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only] ...
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) — hence the unusual import order.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, ArchConfig, OTAConfig,  # noqa: E402
+                           ShapeConfig, TrainConfig, get_config,
+                           ota_overrides, approx_param_count,
+                           active_param_count)
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.train import serve as serve_lib  # noqa: E402
+from repro.train import trainer as trainer_lib  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# shapes whose decode needs a sliding window (sub-quadratic rule, DESIGN.md §5)
+LONG_WINDOW = 8192
+SKIPS = {
+    # (arch, shape): reason — recorded, not silently dropped
+    ("whisper_base", "long_500k"):
+        "enc-dec with <=448-token decoder context; 500k decode is void",
+}
+
+
+def decode_window_for(arch: ArchConfig, shape: ShapeConfig) -> Optional[int]:
+    if shape.name != "long_500k":
+        return None
+    if arch.family in ("ssm",):
+        return None                       # no KV cache at all
+    return LONG_WINDOW                    # dense/moe/vlm/hybrid: SWA variant
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                train_cfg: Optional[TrainConfig] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, L = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train" or shape.kind == "prefill":
+        n_text = L - (arch.n_vision_tokens if arch.family == "vlm" else 0)
+        batch = {"tokens": sds((B, n_text), jnp.int32)}
+        if arch.family == "vlm":
+            batch["extra"] = sds((B, arch.n_vision_tokens, arch.d_model),
+                                 jnp.bfloat16)
+            batch["positions"] = sds((B, L, 3), jnp.int32)
+        if arch.encoder is not None:
+            e = arch.encoder
+            batch["frames"] = sds((B, e.n_frames, e.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token + cache handled separately
+    return {"tokens": sds((B, 1), jnp.int32)}
+
+
+def _collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output bytes of collective ops in compiled HLO."""
+    ops = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+           "collective-permute")
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                   "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                   "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+    out = {k: 0.0 for k in ops}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        m = re.match(r"\s*(?:\(?[\w.\-%]*\)?\s*)?([a-z\-]+)", rhs.strip())
+        opname = None
+        for op in ops:
+            token = rhs.strip()
+            # result types precede the op name in HLO: "f32[...] all-reduce("
+            idx = token.find(op + "(")
+            if idx == -1:
+                idx = token.find(op + "-start(")
+            if idx != -1:
+                opname = op
+                typestr = token[:idx]
+                break
+        if opname is None or (opname + "-done") in rhs:
+            continue
+        nbytes = 0.0
+        for dt, dims in shape_re.findall(typestr):
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for dim in dims.split(","):
+                if dim:
+                    n *= int(dim)
+            nbytes += n * dtype_bytes[dt]
+        out[opname] += nbytes
+    out["total"] = sum(out[k] for k in ops)
+    return out
+
+
+def analyze(compiled, lowered=None) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = _collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "mem_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "collective_bytes": coll,
+    }
+
+
+def dryrun_one(arch_id: str, shape_id: str, multi_pod: bool,
+               aggregator: str = "a_dsgd", ota_axes=None,
+               variant: str = "baseline",
+               ota_kw: Optional[dict] = None) -> Dict:
+    arch = get_config(arch_id)
+    shape = INPUT_SHAPES[shape_id]
+    if (arch_id, shape_id) in SKIPS:
+        return {"skipped": SKIPS[(arch_id, shape_id)]}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        train_cfg = TrainConfig(compute_dtype="bfloat16", remat=True,
+                                total_steps=1000)
+        ota = ota_overrides(arch_id)
+        kw = dict(scheme=aggregator)
+        if ota_kw:
+            kw.update(ota_kw)
+        import dataclasses as _dc
+        ota = _dc.replace(ota, **kw)
+        if ota_axes is None:
+            ota_axes = ("pod", "data") if multi_pod else ("data",)
+        if ota.layout == "sliced":
+            ts = trainer_lib.make_train_step_sliced(
+                arch, train_cfg, ota, mesh, ota_axes=ota_axes, donate=True)
+        else:
+            ts = trainer_lib.make_train_step(arch, train_cfg, ota, mesh,
+                                             ota_axes=ota_axes, donate=True)
+        batch = input_specs(arch, shape, train_cfg)
+        jfn = ts.jitted(batch)
+        aparams = trainer_lib.abstract_params(arch)
+        opt_abstract = jax.eval_shape(
+            lambda p: trainer_lib.make_optimizer(train_cfg).init(p), aparams)
+        sdt = jnp.dtype(ota.state_dtype)
+        if ota.layout == "sliced":
+            sh_shape, rep_shape = ts.delta_shape
+            delta = {"sh": jax.ShapeDtypeStruct(sh_shape, sdt),
+                     "rep": jax.ShapeDtypeStruct(rep_shape, sdt)}
+        else:
+            delta = jax.ShapeDtypeStruct(ts.delta_shape, sdt)
+        lowered = jfn.lower(aparams, opt_abstract, delta, batch,
+                            jax.ShapeDtypeStruct((), jnp.int32),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        compiled = lowered.compile()
+        info = analyze(compiled)
+        info["d"] = ts.d
+        info["d_pad"] = ts.d_pad
+        info["m_devices"] = ts.m_devices
+    elif shape.kind == "prefill":
+        # prefill = forward filling a fresh KV cache, auto sharding
+        ss = serve_lib.make_serve_step(arch, mesh, shape.global_batch,
+                                       shape.seq_len)
+        batch = input_specs(arch, shape)
+        aparams = trainer_lib.abstract_params(arch)
+        acache = jax.eval_shape(
+            lambda: model_lib.init_decode_cache(arch, shape.global_batch,
+                                                shape.seq_len, jnp.bfloat16))
+
+        def prefill(params, cache, batch):
+            from repro.models import transformer
+            enc_out = None
+            if arch.encoder is not None:
+                enc_out = transformer.encode_audio(
+                    params, arch, batch["frames"].astype(jnp.bfloat16))
+            logits, new_cache, _ = transformer.forward(
+                params, arch, batch["tokens"],
+                positions=batch.get("positions"),
+                extra_embeds=batch.get("extra"),
+                enc_out=enc_out, cache=cache, cache_index=0,
+                compute_dtype=jnp.bfloat16, remat=False)
+            return logits[:, -1:], new_cache
+
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        bspec = NamedSharding(mesh, P(data_axes))
+        jfn = jax.jit(prefill,
+                      in_shardings=(ss.param_sharding, ss.cache_sharding,
+                                    jax.tree.map(lambda _: bspec, batch)),
+                      out_shardings=(None, ss.cache_sharding),
+                      donate_argnums=(1,))
+        lowered = jfn.lower(aparams, acache, batch)
+        compiled = lowered.compile()
+        info = analyze(compiled)
+    else:  # decode
+        window = decode_window_for(arch, shape)
+        ss = serve_lib.make_serve_step(arch, mesh, shape.global_batch,
+                                       shape.seq_len, decode_window=window)
+        aparams = trainer_lib.abstract_params(arch)
+        acache = jax.eval_shape(lambda: ss.init_cache())
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        args = [aparams, acache, tok, jax.ShapeDtypeStruct((), jnp.int32)]
+        if arch.encoder is not None:
+            args.append(jax.ShapeDtypeStruct(
+                (shape.global_batch, arch.encoder.n_frames,
+                 arch.encoder.d_model), jnp.bfloat16))
+        lowered = ss.decode_fn.lower(*args)
+        compiled = lowered.compile()
+        info = analyze(compiled)
+        info["decode_window"] = window
+
+    info.update({
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "aggregator": aggregator if shape.kind == "train" else None,
+        "variant": variant,
+        "kind": shape.kind,
+        "compile_seconds": round(time.time() - t0, 1),
+        "model_params": approx_param_count(arch),
+        "active_params": active_param_count(arch),
+    })
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--aggregator", default="a_dsgd")
+    ap.add_argument("--ota-axes", default=None,
+                    help="comma list, e.g. 'pod' for the site_ota variant")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--ota", default=None,
+                    help='JSON OTAConfig overrides, e.g. '
+                         '\'{"layout":"sliced","frame_dtype":"bfloat16"}\'')
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    outdir = args.out or os.path.abspath(RESULTS_DIR)
+    os.makedirs(outdir, exist_ok=True)
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    ota_axes = tuple(args.ota_axes.split(",")) if args.ota_axes else None
+
+    n_ok = n_fail = 0
+    for arch_id in archs:
+        for shape_id in shapes:
+            for mp in meshes:
+                tag = f"{arch_id}__{shape_id}__{'mp' if mp else 'sp'}__" \
+                      f"{args.aggregator}__{args.variant}"
+                path = os.path.join(outdir, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    info = dryrun_one(arch_id, shape_id, mp,
+                                      aggregator=args.aggregator,
+                                      ota_axes=ota_axes,
+                                      variant=args.variant,
+                                      ota_kw=json.loads(args.ota)
+                                      if args.ota else None)
+                    with open(path, "w") as f:
+                        json.dump(info, f, indent=1)
+                    if "skipped" in info:
+                        print(f"  -> SKIP ({info['skipped']})")
+                    else:
+                        print(f"  -> ok flops={info['flops']:.3e} "
+                              f"coll={info['collective_bytes']['total']:.3e}B "
+                              f"({info['compile_seconds']}s)")
+                    n_ok += 1
+                except Exception as e:   # noqa: BLE001
+                    n_fail += 1
+                    print(f"  -> FAIL {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    with open(path + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    decode_step, init_decode_cache, init_params, loss_fn, param_count,
+)

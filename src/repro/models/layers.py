@@ -1,0 +1,254 @@
+"""Shared model layers: norms, RoPE / M-RoPE, GQA attention (train/prefill/
+decode with KV cache, optional sliding window and qk-norm), SwiGLU MLP.
+
+Conventions: params are nested dicts of jnp arrays; every ``init_*`` gets a
+PRNG key; every ``apply`` is a pure function.  Activations may be bf16; all
+softmax/norm math is fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, in_dim, out_dim, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim),
+                                        jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(x: jnp.ndarray, p: Params, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["w"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(x: jnp.ndarray, p: Params, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, L, H, Dh); positions: (B, L) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, L, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions3: (B, L, 3) = (t, h, w) ids.
+
+    The head_dim/2 frequency slots are split into |sections| groups; group i
+    rotates by positions3[..., i] (arXiv:2409.12191 §2.1).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)               # (half,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions3.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1)                                                # (B, L, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None
+    causal: bool = True
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    norm_eps: float = 1e-5
+
+
+def init_attention(key, spec: AttnSpec) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h = spec.d_model, spec.head_dim
+    p = {
+        "wq": _dense_init(ks[0], d, spec.n_heads * h),
+        "wk": _dense_init(ks[1], d, spec.n_kv_heads * h),
+        "wv": _dense_init(ks[2], d, spec.n_kv_heads * h),
+        "wo": _dense_init(ks[3], spec.n_heads * h, d),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = init_rmsnorm(h)
+        p["k_norm"] = init_rmsnorm(h)
+    return p
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[int], k_valid: Optional[jnp.ndarray] = None):
+    """(B, 1, Lq, Lk) additive bias in fp32."""
+    diff = q_pos[:, :, None] - k_pos[:, None, :]        # (B, Lq, Lk)
+    ok = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, -1e30)[:, None, :, :].astype(jnp.float32)
+
+
+def attention(p: Params, spec: AttnSpec, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              kv_cache: Optional[Params] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              kv_source: Optional[jnp.ndarray] = None,
+              kv_positions: Optional[jnp.ndarray] = None):
+    """GQA attention.
+
+    x: (B, L, D).  positions: (B, L) (or (B, L, 3) for M-RoPE).
+    kv_cache: {"k","v"} of (B, C, Hkv, Dh) — decode mode: new K/V written at
+      ``cache_index`` (B,)-or-scalar slot, attention runs over the cache.
+    kv_source: cross-attention source (B, Lsrc, D) (whisper decoder).
+    Returns (out, new_kv_cache|None).
+    """
+    B, L, _ = x.shape
+    h, hq, hkv = spec.head_dim, spec.n_heads, spec.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, L, hq, h)
+    src = kv_source if kv_source is not None else x
+    k = (src @ p["wk"].astype(x.dtype)).reshape(B, src.shape[1], hkv, h)
+    v = (src @ p["wv"].astype(x.dtype)).reshape(B, src.shape[1], hkv, h)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"], spec.norm_eps)
+        k = rms_norm(k, p["k_norm"], spec.norm_eps)
+    use_rope = kv_source is None  # no rope on cross-attention
+    if use_rope:
+        if spec.mrope_sections is not None:
+            q = apply_mrope(q, positions, spec.rope_theta, spec.mrope_sections)
+            kpos = kv_positions if kv_positions is not None else positions
+            k = apply_mrope(k, kpos, spec.rope_theta, spec.mrope_sections)
+            q_pos1 = positions[..., 0]
+        else:
+            q = apply_rope(q, positions, spec.rope_theta)
+            kpos = kv_positions if kv_positions is not None else positions
+            k = apply_rope(k, kpos, spec.rope_theta)
+            q_pos1 = positions
+    else:
+        q_pos1 = positions if positions.ndim == 2 else positions[..., 0]
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode: write the L new entries (L=1 for decode) at the cache slot.
+        # The cache stores absolute positions ("pos", init -1) so both full
+        # and ring-buffer (sliding-window) caches share one mask rule.
+        idx = jnp.asarray(cache_index)
+        ck, cv, cpos = kv_cache["k"], kv_cache["v"], kv_cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 idx, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cpos, q_pos1.astype(cpos.dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        k_valid = cpos >= 0
+        bias = _mask_bias(q_pos1, cpos, spec.causal, spec.sliding_window,
+                          k_valid)
+    else:
+        k_pos = (kv_positions if kv_positions is not None else q_pos1)
+        if kv_source is not None:
+            k_pos = jnp.broadcast_to(
+                jnp.arange(src.shape[1])[None, :], (B, src.shape[1]))
+            bias = _mask_bias(q_pos1, k_pos, False, None)
+        else:
+            bias = _mask_bias(q_pos1, k_pos, spec.causal, spec.sliding_window)
+
+    # grouped heads: fold group dim into q
+    groups = hq // hkv
+    qg = q.reshape(B, L, hkv, groups, h)
+    scores = jnp.einsum("blkgh,bmkh->bklgm", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(h))
+    scores = scores + bias[:, 0][:, None, :, None, :]   # (B,hkv,L,g,M)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bklgm,bmkh->blkgh", probs, v)
+    out = out.reshape(B, L, hq * h)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": _dense_init(k1, d, d_ff),
+            "w_up": _dense_init(k2, d, d_ff),
+            "w_down": _dense_init(k3, d_ff, d)}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_in": _dense_init(k1, d, d_ff),
+            "b_in": jnp.zeros((d_ff,), jnp.float32),
+            "w_out": _dense_init(k2, d_ff, d),
+            "b_out": jnp.zeros((d,), jnp.float32)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype) + p["b_in"].astype(x.dtype))
+    return h @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Public model API: init / train forward (loss) / serve decode step.
+
+``Batch`` covers all modalities:
+  tokens    (B, L)  int32        — always present (labels = tokens shifted)
+  positions (B, L[,3]) int32     — optional (M-RoPE needs 3-D)
+  extra     (B, P, D) float      — stub frontend embeddings (vlm)
+  frames    (B, F, D_enc) float  — stub audio frames (whisper encoder input)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    return transformer.init_params(cfg, key)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            aux_weight: float = 0.01,
+            loss_chunk: int = 0) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux). Returns (loss, metrics).
+
+    loss_chunk > 0 computes the vocab head + CE over token chunks (scan) so
+    the (tokens, vocab) logits tensor is never materialised at once — needed
+    at framework scale when the vocab does not shard evenly.
+    """
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = transformer.encode_audio(
+            params, cfg, batch["frames"].astype(compute_dtype))
+    hidden, _, aux = transformer.forward(
+        params, cfg, tokens,
+        positions=batch.get("positions"),
+        extra_embeds=batch.get("extra"),
+        enc_out=enc_out,
+        compute_dtype=compute_dtype, remat=remat, return_hidden=True)
+    # predict token t+1 from prefix; modality prefixes are unsupervised
+    P = hidden.shape[1] - tokens.shape[1]
+    h = hidden[:, P:, :][:, :-1, :]
+    tgt = tokens[:, 1:]
+    w_head = (params["embed"].T if cfg.tie_embeddings
+              else params["lm_head"])
+
+    def chunk_nll(hc, tc):
+        lg = (hc @ w_head.astype(hc.dtype)).astype(jnp.float32)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+
+    B, Lm1, D = h.shape
+    n_tok = B * Lm1
+    if loss_chunk and n_tok > loss_chunk:
+        ck = loss_chunk
+        while n_tok % ck:
+            ck -= 1
+        hf = h.reshape(n_tok // ck, ck, D)
+        tf = tgt.reshape(n_tok // ck, ck)
+        nll_sum = jax.lax.scan(
+            lambda acc, xs: (acc + jnp.sum(chunk_nll(*xs)), None),
+            jnp.zeros((), jnp.float32), (hf, tf))[0]
+        loss = nll_sum / n_tok
+    else:
+        loss = jnp.mean(chunk_nll(h, tgt))
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl": jnp.exp(jnp.clip(loss, 0, 20.0))}
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16,
+                      decode_window: Optional[int] = None) -> Params:
+    return transformer.init_cache(cfg, batch, max_len, dtype, decode_window)
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
+                cache: Params, pos, *,
+                enc_out: Optional[jnp.ndarray] = None,
+                compute_dtype=jnp.bfloat16,
+                decode_window: Optional[int] = None):
+    """One-token decode. token: (B, 1) int32; pos: scalar current position.
+
+    Returns (logits (B, 1, V), new_cache).  ``cache_index`` is pos for full
+    caches, pos % window for ring-buffer (sliding-window) caches.
+    """
+    C = None
+    if decode_window is not None:
+        C = decode_window
+        cache_index = jnp.asarray(pos) % C
+    else:
+        cache_index = jnp.asarray(pos)
+    B = token.shape[0]
+    pos1 = jnp.full((B, 1), pos, jnp.int32)
+    positions = (jnp.repeat(pos1[..., None], 3, axis=-1)
+                 if cfg.mrope_sections is not None else pos1)
+    logits, new_cache, _ = transformer.forward(
+        params, cfg, token, positions=positions, enc_out=enc_out,
+        cache=cache, cache_index=cache_index, compute_dtype=compute_dtype,
+        remat=False, decode_window=decode_window)
+    return logits, new_cache
+
+
+def param_count(params: Params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))

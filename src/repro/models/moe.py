@@ -1,0 +1,84 @@
+"""Mixture-of-experts MLP (granite-moe) — GShard-style einsum dispatch.
+
+Tokens are grouped (group size g), routed top-k with a capacity limit
+C = ceil(g * top_k * capacity_factor / E), dispatched to (E, C, D) buffers by
+one-hot einsum, processed by per-expert SwiGLU, and combined with the router
+weights.  Experts shard over the 'model' mesh axis; GSPMD materialises the
+all-to-all from the (group, expert) resharding.  Overflowing tokens are
+dropped (standard GShard semantics) — the residual connection carries them.
+
+The router aux load-balance loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, d: int, cfg: MoEConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = cfg.num_experts, cfg.d_expert
+    return {
+        "router": _dense_init(k1, d, e),
+        "w_gate": jax.random.normal(k2, (e, d, f), jnp.float32) / jnp.sqrt(d),
+        "w_up": jax.random.normal(k3, (e, d, f), jnp.float32) / jnp.sqrt(d),
+        "w_down": jax.random.normal(k4, (e, f, d), jnp.float32) / jnp.sqrt(f),
+    }
+
+
+def moe_mlp(p: Params, x: jnp.ndarray, cfg: MoEConfig,
+            group_size: int = 256,
+            capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, L, D) -> (out, aux_loss)."""
+    B, L, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    n_tok = B * L
+    g = min(group_size, n_tok)
+    while n_tok % g:
+        g -= 1
+    G = n_tok // g
+    xt = x.reshape(G, g, D)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                             # (G,g,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)     # renorm
+
+    C = max(1, int(g * K * capacity_factor / E))
+    if g <= 64:
+        # tiny groups (decode): a single expert can receive every token —
+        # use lossless capacity so decode matches prefill exactly
+        C = max(C, g)
+    # position of each (token, k) routing choice within its expert queue
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)                # (G,g,K,E)
+    flat = onehot.reshape(G, g * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                       # (G,gK,E)
+    pos = (pos_in_e * flat).sum(-1).reshape(G, g, K)                 # (G,g,K)
+    keep = pos < C
+    # dispatch tensor (G, g, E, C): 1 where token goes to (expert, slot)
+    disp = (jax.nn.one_hot(topi, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, C, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))                 # (G,g,K,E,C)
+    combine = disp * topv[..., None, None].astype(x.dtype)
+    disp = disp.sum(2)                                               # (G,g,E,C)
+    combine = combine.sum(2)                                         # (G,g,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xt)                      # (G,E,C,D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                               p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h * u, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine, ye)                  # (G,g,D)
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))                                     # (E,)
+    fe = jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32).mean((0, 1))
+    aux = E * jnp.sum(me * fe)
+    return out.reshape(B, L, D), aux

@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) mixer block — chunked scan for train/prefill, O(1) decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024): per-head scalar decay
+a_t = exp(dt_t * A_head), shared (n_groups=1) B/C of size d_state, depthwise
+causal conv on the SSM input, gated output.  The chunked algorithm computes
+intra-chunk contributions with a lower-triangular decay-weighted "attention"
+and carries the (H, hd, N) state across chunks with a lax.scan — compile time
+is flat in sequence length and the state shards over heads ('model' axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import _dense_init, init_rmsnorm, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig) -> Params:
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        # per-output input projections [z, x, B, C, dt]: the fused variant's
+        # split boundaries (7168/14336/14400/...) cannot align with a 16-way
+        # output sharding, which made GSPMD re-lay the whole activation per
+        # layer (measured: 105 GB/dev of all-gathers on zamba2 — §Perf it.4);
+        # separate matrices shard independently and split nothing.
+        "w_z": _dense_init(ks[0], d_model, d_in),
+        "w_x": _dense_init(ks[1], d_model, d_in),
+        "w_b": _dense_init(ks[3], d_model, cfg.d_state),
+        "w_c": _dense_init(ks[4], d_model, cfg.d_state),
+        "w_dt": _dense_init(ks[5], d_model, n_heads),
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, d_in),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": init_rmsnorm(d_in),
+        "w_out": _dense_init(ks[6], d_in, d_model),
+    }
+
+
+def _split_proj(p, x, d_in, d_state, n_heads):
+    z = x @ p["w_z"].astype(x.dtype)
+    xs = x @ p["w_x"].astype(x.dtype)
+    b = x @ p["w_b"].astype(x.dtype)
+    c = x @ p["w_c"].astype(x.dtype)
+    dt = x @ p["w_dt"].astype(x.dtype)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xs, conv_w, conv_b, state=None):
+    """Depthwise causal conv. xs: (B, L, d_in); state: (B, W-1, d_in)."""
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)            # (B, L+W-1, d_in)
+    out = sum(xp[:, i:i + xs.shape[1]] * conv_w[i].astype(xs.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad[:, :0]
+    return jax.nn.silu(out + conv_b.astype(xs.dtype)), new_state
+
+
+def mamba2_forward(p: Params, x: jnp.ndarray, d_model: int, cfg: SSMConfig,
+                   state: Optional[Params] = None
+                   ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, L, D). state (decode): {"ssm": (B,H,hd,N), "conv": (B,W-1,d_in)}.
+
+    Training/prefill: state is None -> chunked scan from zero state.
+    Decode: L == 1 single-step recurrence; returns the updated state.
+    """
+    B, L, _ = x.shape
+    d_in = cfg.expand * d_model
+    hd, N = cfg.head_dim, cfg.d_state
+    H = d_in // hd
+    z, xs, b, c, dt = _split_proj(p, x, d_in, N, H)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])               # (B, L, H)
+    a = -jnp.exp(p["a_log"])                           # (H,) negative
+    decay = jnp.exp(dt * a)                            # (B, L, H) in (0,1)
+    xh = xs.reshape(B, L, H, hd).astype(jnp.float32)
+    bf = b.astype(jnp.float32)                          # (B, L, N)
+    cf = c.astype(jnp.float32)                          # (B, L, N)
+
+    if state is not None and L == 1:
+        # single-step: h' = decay * h + dt * x  outer  B ; y = C . h'
+        h0 = state["ssm"].astype(jnp.float32)           # (B,H,hd,N)
+        dtx = dt[:, 0, :, None] * xh[:, 0]              # (B,H,hd)
+        h1 = decay[:, 0, :, None, None] * h0 + dtx[..., None] * bf[:, 0, None, None, :]
+        y = jnp.einsum("bhdn,bn->bhd", h1, cf[:, 0])[:, None]   # (B,1,H,hd)
+        y = y + p["d_skip"][None, None, :, None] * xh
+        new_state = {"ssm": h1.astype(state["ssm"].dtype), "conv": new_conv}
+    else:
+        Q = min(cfg.chunk, L)
+        while L % Q:
+            Q -= 1
+        nC = L // Q
+        # reshape into chunks
+        dtc = dt.reshape(B, nC, Q, H)
+        dec = decay.reshape(B, nC, Q, H)
+        xc = xh.reshape(B, nC, Q, H, hd)
+        bc = bf.reshape(B, nC, Q, N)
+        cc = cf.reshape(B, nC, Q, N)
+        logdec = jnp.log(jnp.maximum(dec, 1e-20))
+        cum = jnp.cumsum(logdec, axis=2)                # (B,nC,Q,H)
+        # intra-chunk: y_t = sum_{s<=t} C_t.B_s dt_s x_s * exp(cum_t - cum_s)
+        rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nC,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+        # mask BEFORE exp: exp of masked (t<s) entries can overflow and the
+        # where-gradient would turn inf * 0 into NaN
+        gate = jnp.exp(jnp.where(tri, rel, -1e30))
+        cb = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)            # (B,nC,Q,Q)
+        w = cb[..., None] * gate * dtc[:, :, None, :, :]      # (B,nC,Q,Q,H)
+        y_intra = jnp.einsum("bcqsh,bcshd->bcqhd", w, xc)
+        # inter-chunk: carry state across chunks
+        # state update: h' = (prod decay) h + sum_s exp(cum_Q - cum_s) dt_s x_s B_s
+        tail = cum[:, :, -1:, :] - cum                        # (B,nC,Q,H)
+        wx = jnp.exp(tail)[..., None] * (dtc[..., None] * xc)  # (B,nC,Q,H,hd)
+        dS = jnp.einsum("bcqhd,bcqn->bchdn", wx, bc)           # (B,nC,H,hd,N)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nC,H)
+
+        def scan_body(h, inp):
+            dS_c, cd_c = inp
+            h_new = cd_c[..., None, None] * h + dS_c
+            return h_new, h
+
+        h0 = (state["ssm"].astype(jnp.float32) if state is not None
+              else jnp.zeros((B, H, hd, N), jnp.float32))
+        h_fin, h_prev = jax.lax.scan(
+            scan_body, h0,
+            (dS.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        h_prev = h_prev.transpose(1, 0, 2, 3, 4)               # (B,nC,H,hd,N)
+        yin = jnp.einsum("bcqn,bchdn->bcqhd", cc, h_prev)      # (B,nC,Q,H,hd)
+        # the carried state decays by exp(cum_t) (chunk start -> t, per head)
+        yin = yin * jnp.exp(cum)[..., None]
+        y = (y_intra + yin).reshape(B, L, H, hd)
+        y = y + p["d_skip"][None, None, :, None] * xh
+        new_state = None
+        if state is not None:
+            new_state = {"ssm": h_fin.astype(state["ssm"].dtype),
+                         "conv": new_conv}
+
+    y = (y * jax.nn.silu(z.reshape(B, L, H, hd).astype(jnp.float32)))
+    y = y.reshape(B, L, d_in)
+    y = rms_norm(y.astype(x.dtype), p["out_norm"])
+    return y @ p["w_out"].astype(x.dtype), new_state
+
+
+def init_mamba2_state(cfg: SSMConfig, d_model: int, batch: int,
+                      dtype=jnp.float32) -> Params:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    return {"ssm": jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype)}

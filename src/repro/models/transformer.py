@@ -1,0 +1,401 @@
+"""Model assembly: scanned decoder stacks for all assigned families.
+
+Stacks are homogeneous per architecture (dense GQA / MoE / Mamba2 / RWKV6),
+so layers are lax.scan'ed over stacked params — compile time flat in depth.
+Zamba2's hybrid layout is 13 super-blocks of (6 scanned Mamba2 layers + one
+application of the weight-SHARED attention block) + trailing Mamba2 layers.
+Whisper adds a bidirectional encoder and per-decoder-layer cross-attention.
+Qwen2-VL consumes stub patch embeddings (prefix) and M-RoPE positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA2, MOE, RWKV6, SWA, ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (AttnSpec, attention, gelu_mlp, init_attention,
+                                 init_gelu_mlp, init_rmsnorm, init_swiglu,
+                                 rms_norm, swiglu, _dense_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ArchConfig, sliding: bool = False,
+              decode_window: Optional[int] = None,
+              causal: bool = True) -> AttnSpec:
+    window = cfg.sliding_window if sliding else None
+    if decode_window is not None:
+        window = decode_window
+    return AttnSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                    qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+                    sliding_window=window, causal=causal,
+                    mrope_sections=cfg.mrope_sections, norm_eps=cfg.norm_eps)
+
+
+def block_kind(cfg: ArchConfig) -> str:
+    kinds = set(cfg.blocks())
+    assert len(kinds) == 1, f"heterogeneous stack unsupported: {kinds}"
+    return next(iter(kinds))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind in (ATTN, SWA):
+        p = {"ln1": init_rmsnorm(d), "ln2": init_rmsnorm(d),
+             "attn": init_attention(ks[0], attn_spec(cfg))}
+        if cfg.family == "audio":
+            p["mlp"] = init_gelu_mlp(ks[1], d, cfg.d_ff)
+            p["ln_x"] = init_rmsnorm(d)
+            p["xattn"] = init_attention(ks[2], attn_spec(cfg, causal=False))
+        else:
+            p["mlp"] = init_swiglu(ks[1], d, cfg.d_ff)
+        return p
+    if kind == MOE:
+        return {"ln1": init_rmsnorm(d), "ln2": init_rmsnorm(d),
+                "attn": init_attention(ks[0], attn_spec(cfg)),
+                "moe": moe_lib.init_moe(ks[1], d, cfg.moe)}
+    if kind == MAMBA2:
+        return {"ln1": init_rmsnorm(d),
+                "mamba": ssm_lib.init_mamba2(ks[0], d, cfg.ssm)}
+    if kind == RWKV6:
+        return {"ln1": init_rmsnorm(d), "ln2": init_rmsnorm(d),
+                "time": rwkv_lib.init_rwkv6_time(ks[0], d, cfg.rwkv),
+                "channel": rwkv_lib.init_rwkv6_channel(ks[1], d, cfg.d_ff)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    kind = block_kind(cfg)
+    k_embed, k_blocks, k_head, k_shared, k_enc = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda kk: init_layer(kk, cfg, kind))(layer_keys)
+    params: Params = {
+        "embed": jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(k_head, cfg.d_model, cfg.vocab)
+    if cfg.shared_attn_every:
+        ks1, ks2 = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks1, attn_spec(cfg)),
+            "mlp": init_swiglu(ks2, cfg.d_model, cfg.d_ff)}
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        ek = jax.random.split(k_enc, e.n_layers + 1)
+        espec = AttnSpec(d_model=e.d_model, n_heads=e.n_heads,
+                         n_kv_heads=e.n_heads, head_dim=e.d_model // e.n_heads,
+                         causal=False)
+
+        def enc_layer(kk):
+            a, b = jax.random.split(kk)
+            return {"ln1": init_rmsnorm(e.d_model), "ln2": init_rmsnorm(e.d_model),
+                    "attn": init_attention(a, espec),
+                    "mlp": init_gelu_mlp(b, e.d_model, e.d_ff)}
+
+        params["encoder"] = {
+            "blocks": jax.vmap(enc_layer)(ek[:-1]),
+            "final_norm": init_rmsnorm(e.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def apply_block(p: Params, cfg: ArchConfig, kind: str, x: jnp.ndarray,
+                positions, cache=None, cache_index=None, enc_out=None,
+                decode_window: Optional[int] = None):
+    """One decoder block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    if kind in (ATTN, SWA, MOE):
+        spec = attn_spec(cfg, sliding=(kind == SWA or cfg.sliding_window
+                                       is not None),
+                         decode_window=decode_window)
+        h, kv = attention(p["attn"], spec, rms_norm(x, p["ln1"], cfg.norm_eps),
+                          positions,
+                          kv_cache=None if cache is None else cache["kv"],
+                          cache_index=cache_index)
+        x = x + h
+        if enc_out is not None:   # whisper decoder cross-attention
+            hx, _ = attention(p["xattn"], attn_spec(cfg, causal=False),
+                              rms_norm(x, p["ln_x"], cfg.norm_eps),
+                              positions, kv_source=enc_out)
+            x = x + hx
+        h2_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == MOE:
+            h2, aux = moe_lib.moe_mlp(p["moe"], h2_in, cfg.moe)
+        elif cfg.family == "audio":
+            h2 = gelu_mlp(p["mlp"], h2_in)
+        else:
+            h2 = swiglu(p["mlp"], h2_in)
+        x = x + h2
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["kv"] = kv
+        return x, new_cache, aux
+    if kind == MAMBA2:
+        h, st = ssm_lib.mamba2_forward(
+            p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg.d_model,
+            cfg.ssm, None if cache is None else cache["ssm_state"])
+        x = x + h
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["ssm_state"] = st
+        return x, new_cache, aux
+    if kind == RWKV6:
+        st_t = None if cache is None else cache["rwkv"]["time"]
+        st_c = None if cache is None else cache["rwkv"]["channel"]
+        h, st_t2 = rwkv_lib.rwkv6_time_mix(
+            p["time"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg.rwkv, st_t)
+        x = x + h
+        h2, st_c2 = rwkv_lib.rwkv6_channel_mix(
+            p["channel"], rms_norm(x, p["ln2"], cfg.norm_eps), st_c)
+        x = x + h2
+        if cache is not None:
+            new_cache = {"rwkv": {"time": st_t2, "channel": st_c2}}
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def _apply_shared_attn(p: Params, cfg: ArchConfig, x, positions,
+                       cache=None, cache_index=None,
+                       decode_window: Optional[int] = None):
+    spec = attn_spec(cfg, decode_window=decode_window)
+    h, kv = attention(p["attn"], spec, rms_norm(x, p["ln1"], cfg.norm_eps),
+                      positions, kv_cache=cache, cache_index=cache_index)
+    x = x + h
+    x = x + swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# whole-model forward
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(params: Params, cfg: ArchConfig, frames: jnp.ndarray):
+    """Whisper encoder over stub frame embeddings (B, n_frames, d_enc)."""
+    e = cfg.encoder
+    espec = AttnSpec(d_model=e.d_model, n_heads=e.n_heads,
+                     n_kv_heads=e.n_heads, head_dim=e.d_model // e.n_heads,
+                     causal=False)
+    B, L, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    x = frames
+
+    def body(x, lp):
+        h, _ = attention(lp["attn"], espec, rms_norm(x, lp["ln1"]), pos)
+        x = x + h
+        x = x + gelu_mlp(lp["mlp"], rms_norm(x, lp["ln2"]))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            cache: Optional[Params] = None,
+            cache_index=None,
+            compute_dtype=jnp.bfloat16,
+            remat: bool = False,
+            decode_window: Optional[int] = None,
+            return_hidden: bool = False):
+    """Full forward. Returns (logits|hidden, new_cache, aux_loss).
+
+    tokens: (B, L) int32. extra_embeds: modality prefix (B, P, D) — the stub
+    frontend output for vlm; for audio, enc_out is the encoder output fed to
+    cross-attention.  cache/cache_index: decode mode.
+    """
+    kind = block_kind(cfg)
+    B, Lt = tokens.shape
+    x = params["embed"].astype(compute_dtype)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(compute_dtype), x], axis=1)
+    L = x.shape[1]
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+        if cache_index is not None:
+            pos1 = pos1 + jnp.asarray(cache_index, jnp.int32)
+        if cfg.mrope_sections is not None:
+            positions = jnp.repeat(pos1[..., None], 3, axis=-1)
+        else:
+            positions = pos1
+
+    block_fn = functools.partial(apply_block, cfg=cfg, kind=kind,
+                                 cache_index=cache_index, enc_out=enc_out,
+                                 decode_window=decode_window)
+    _bf = block_fn
+    block_fn = lambda p, x, positions, cache: _bf(       # noqa: E731
+        p, x=x, positions=positions, cache=cache)
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.shared_attn_every:
+        # Zamba2: python loop over super-blocks, scanned mamba segments
+        every = cfg.shared_attn_every
+        n_shared = cfg.n_layers // every
+        x, cache_out, aux_total = _hybrid_stack(
+            params, cfg, kind, x, positions, cache, cache_index,
+            block_fn, every, n_shared, decode_window)
+        out = (rms_norm(x, params["final_norm"], cfg.norm_eps)
+               if return_hidden else _head(params, cfg, x))
+        return out, cache_out, aux_total
+
+    def scan_body(carry, xs):
+        x = carry
+        if cache is None:
+            lp = xs
+            x, _, aux = block_fn(lp, x, positions, None)
+            return x, aux
+        lp, lcache = xs
+        x, new_c, aux = block_fn(lp, x, positions, lcache)
+        return x, (new_c, aux)
+
+    if cache is None:
+        x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+        new_cache = None
+        aux_total = jnp.sum(auxs)
+    else:
+        x, (new_cache, auxs) = jax.lax.scan(scan_body, x,
+                                            (params["blocks"], cache))
+        aux_total = jnp.sum(auxs)
+    out = (rms_norm(x, params["final_norm"], cfg.norm_eps)
+           if return_hidden else _head(params, cfg, x))
+    return out, new_cache, aux_total
+
+
+def _hybrid_stack(params, cfg, kind, x, positions, cache, cache_index,
+                  block_fn, every, n_shared, decode_window):
+    """Zamba2 layout: [every x mamba, shared-attn] * n_shared + tail mamba."""
+    n_layers = cfg.n_layers
+    aux_total = jnp.zeros((), jnp.float32)
+    mamba_params = params["blocks"]
+    shared = params["shared_attn"]
+    mcaches = None if cache is None else cache["mamba"]
+    acaches = None if cache is None else cache["shared"]
+    new_m, new_a = [], []
+
+    def seg_scan(x, seg_params, seg_cache):
+        def body(carry, xs):
+            x = carry
+            if seg_cache is None:
+                x, _, aux = block_fn(xs, x, positions, None)
+                return x, aux
+            lp, lc = xs
+            x, nc, aux = block_fn(lp, x, positions, lc)
+            return x, (nc, aux)
+        if seg_cache is None:
+            x, auxs = jax.lax.scan(body, x, seg_params)
+            return x, None, jnp.sum(auxs)
+        x, (ncache, auxs) = jax.lax.scan(body, x, (seg_params, seg_cache))
+        return x, ncache, jnp.sum(auxs)
+
+    idx = 0
+    for blk in range(n_shared):
+        seg_p = jax.tree.map(lambda a: a[idx:idx + every], mamba_params)
+        seg_c = None if mcaches is None else jax.tree.map(
+            lambda a: a[idx:idx + every], mcaches)
+        x, nc, aux = seg_scan(x, seg_p, seg_c)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_m.append(nc)
+        a_c = None if acaches is None else jax.tree.map(
+            lambda a: a[blk], acaches)
+        x, na = _apply_shared_attn(shared, cfg, x, positions, a_c,
+                                   cache_index, decode_window)
+        if na is not None:
+            new_a.append(na)
+        idx += every
+    if idx < n_layers:
+        seg_p = jax.tree.map(lambda a: a[idx:], mamba_params)
+        seg_c = None if mcaches is None else jax.tree.map(
+            lambda a: a[idx:], mcaches)
+        x, nc, aux = seg_scan(x, seg_p, seg_c)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_m.append(nc)
+    new_cache = None
+    if cache is not None:
+        mcat = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_m)
+        acat = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_a)
+        new_cache = {"mamba": mcat, "shared": acat}
+    return x, new_cache, aux_total
+
+
+def _head(params: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16,
+               decode_window: Optional[int] = None) -> Params:
+    """Build the per-layer decode state stack for one architecture."""
+    kind = block_kind(cfg)
+    h = cfg.resolved_head_dim
+    C = max_len if decode_window is None else min(max_len, decode_window)
+
+    def kv_cache():
+        return {"k": jnp.zeros((batch, C, cfg.n_kv_heads, h), dtype),
+                "v": jnp.zeros((batch, C, cfg.n_kv_heads, h), dtype),
+                "pos": jnp.full((batch, C), -1, jnp.int32)}
+
+    if cfg.shared_attn_every:
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        mamba = jax.tree.map(
+            lambda a: jnp.stack([a] * cfg.n_layers),
+            {"ssm_state": ssm_lib.init_mamba2_state(cfg.ssm, cfg.d_model,
+                                                    batch)})
+        shared = jax.tree.map(lambda a: jnp.stack([a] * n_shared), kv_cache())
+        return {"mamba": mamba, "shared": shared}
+    if kind in (ATTN, SWA, MOE):
+        return jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers),
+                            {"kv": kv_cache()})
+    if kind == MAMBA2:
+        st = ssm_lib.init_mamba2_state(cfg.ssm, cfg.d_model, batch)
+        return jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers),
+                            {"ssm_state": st})
+    if kind == RWKV6:
+        st = rwkv_lib.init_rwkv6_state(cfg.rwkv, cfg.d_model, batch)
+        return jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers),
+                            {"rwkv": st})
+    raise ValueError(kind)

@@ -1,0 +1,1 @@
+from repro.optim.optim import Optimizer, make_optimizer  # noqa: F401

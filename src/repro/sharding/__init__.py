@@ -1,0 +1,1 @@
+from repro.sharding.specs import param_specs  # noqa: F401

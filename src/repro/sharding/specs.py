@@ -1,0 +1,53 @@
+"""Parameter/activation PartitionSpecs.
+
+Rule-based: for every param leaf, shard the widest dimension divisible by the
+'model' axis size (skipping the leading layer-stack dimension of scanned
+blocks); replicate otherwise.  MoE expert tensors shard the expert dim when
+divisible (expert parallelism); embeddings/lm-head shard vocab.  Batch dims
+of inputs/caches shard over the data axes (handled at the call sites).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+_STACKED_ROOTS = ("blocks", "encoder")
+
+
+def _leaf_spec(path: str, shape, model_size: int, model_axis: str = "model"):
+    if model_size <= 1 or len(shape) == 0:
+        return P()
+    start = 1 if any(f"'{r}'" in path or f"/{r}/" in path or
+                     path.startswith(r) for r in _STACKED_ROOTS) else 0
+    ndim = len(shape)
+    # preferred dims: experts first (expert parallelism), then widest-last
+    dims = list(range(start, ndim))
+    # try from the last (usually output/ff) dim backwards
+    for dim in sorted(dims, key=lambda i: (shape[i] % model_size == 0,
+                                           shape[i]), reverse=True):
+        if shape[dim] % model_size == 0 and shape[dim] >= model_size:
+            spec = [None] * ndim
+            spec[dim] = model_axis
+            return P(*spec)
+    return P()
+
+
+def param_specs(params: Any, model_size: int, model_axis: str = "model"):
+    """PartitionSpec pytree matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        shape = getattr(leaf, "shape", None)
+        if shape is None:
+            shape = np.shape(leaf)
+        specs.append(_leaf_spec(pstr, shape, model_size, model_axis))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def spec_tree_like(tree: Any, spec) -> Any:
+    return jax.tree.map(lambda _: spec, tree)

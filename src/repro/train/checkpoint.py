@@ -1,0 +1,64 @@
+"""Checkpointing: pytree <-> npz with path-encoded keys (no orbax offline).
+
+Dict-of-dict pytrees (our params/opt/delta states) round-trip exactly;
+keys are '/'-joined paths.  Arrays are gathered to host (np.asarray) — at
+real scale this would be a per-shard async write; the format keeps that
+extension trivial (one npz per host).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        if node and all(k.startswith("#") for k in node):
+            items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
+            return tuple(fix(v) for _, v in items)
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, state: Any, step: int = 0) -> None:
+    flat = _flatten({"state": state, "meta": {"step": np.asarray(step)}})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str):
+    with np.load(path) as f:
+        flat = {k: f[k] for k in f.files}
+    tree = _unflatten(flat)
+    step = int(tree["meta"]["step"])
+    return tree["state"], step

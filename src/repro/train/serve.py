@@ -1,0 +1,101 @@
+"""Serving: prefill + one-token decode steps under auto (GSPMD) sharding.
+
+OTA-DSGD is a training-time technique; serving has no gradient aggregation
+(DESIGN.md §5), so serve steps are plain jit with declarative shardings:
+params over 'model', batch over the data axes, KV caches over
+(batch -> data, heads-or-seq -> model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.sharding.specs import param_specs
+from repro.train.trainer import abstract_params
+
+
+def _cache_leaf_spec(shape, data_axes, axis_sizes) -> P:
+    """(layers, B, ...) cache leaf: B over data axes, one inner dim -> model."""
+    model = axis_sizes.get("model", 1)
+    data = int(np.prod([axis_sizes[a] for a in data_axes])) if data_axes else 1
+    spec = [None] * len(shape)
+    if len(shape) >= 2 and data > 1 and shape[1] % data == 0:
+        spec[1] = data_axes if len(data_axes) > 1 else data_axes[0]
+    if model > 1:
+        for dim in range(2, len(shape)):
+            if shape[dim] % model == 0 and shape[dim] >= model:
+                spec[dim] = "model"
+                break
+    return P(*spec)
+
+
+@dataclasses.dataclass
+class ServeStep:
+    arch: ArchConfig
+    mesh: Any
+    batch: int
+    max_len: int
+    decode_window: Optional[int]
+    param_sharding: Any
+    cache_sharding: Any
+    decode_fn: Any          # jit'd (params, cache, token, pos) -> logits, cache
+    prefill_fn: Any = None
+
+    def init_cache(self, dtype=jnp.bfloat16):
+        return model_lib.init_decode_cache(self.arch, self.batch,
+                                           self.max_len, dtype,
+                                           self.decode_window)
+
+
+def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
+                    decode_window: Optional[int] = None,
+                    compute_dtype=jnp.bfloat16,
+                    cache_dtype=jnp.bfloat16) -> ServeStep:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    model_size = axis_sizes.get("model", 1)
+    aparams = abstract_params(arch)
+    pspecs = param_specs(aparams, model_size)
+    ns = lambda s: NamedSharding(mesh, s)                  # noqa: E731
+    param_sh = jax.tree.map(ns, pspecs)
+
+    acache = jax.eval_shape(
+        lambda: model_lib.init_decode_cache(arch, batch, max_len,
+                                            cache_dtype, decode_window))
+    cache_sh = jax.tree.map(
+        lambda l: ns(_cache_leaf_spec(l.shape, data_axes, axis_sizes)), acache)
+    tok_spec = ns(P(data_axes if len(data_axes) > 1 else data_axes[0])
+                  if batch % max(int(np.prod([axis_sizes[a] for a in data_axes])), 1) == 0
+                  and len(data_axes) else P())
+
+    enc_sh = None
+    extra = {}
+    if arch.encoder is not None:
+        extra["enc_out"] = jax.ShapeDtypeStruct(
+            (batch, arch.encoder.n_frames, arch.encoder.d_model),
+            compute_dtype)
+        enc_sh = tok_spec  # batch over data
+
+    def decode(params, cache, token, pos, *args):
+        enc_out = args[0] if args else None
+        logits, new_cache = model_lib.decode_step(
+            params, arch, token, cache, pos, enc_out=enc_out,
+            compute_dtype=compute_dtype, decode_window=decode_window)
+        return logits, new_cache
+
+    in_sh = [param_sh, cache_sh, tok_spec, ns(P())]
+    if arch.encoder is not None:
+        in_sh.append(enc_sh)
+    decode_fn = jax.jit(decode, in_shardings=tuple(in_sh),
+                        out_shardings=(None, cache_sh),
+                        donate_argnums=(1,))
+    return ServeStep(arch=arch, mesh=mesh, batch=batch, max_len=max_len,
+                     decode_window=decode_window, param_sharding=param_sh,
+                     cache_sharding=cache_sh, decode_fn=decode_fn)

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run, and ONLY the dry-run,
+# forces 512 host devices — never set that here).  Multi-device trainer tests
+# spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

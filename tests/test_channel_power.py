@@ -1,0 +1,68 @@
+"""Channel frame / power-allocation invariants (paper §II-IV, eq. 6/12/21/45)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, power
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1.0, 1000.0),
+       st.booleans())
+def test_frame_power_equals_pt(seed, p_t, use_mr):
+    """||x_m||^2 == P_t exactly (paper eq. 12 / 21)."""
+    g = jnp.asarray(np.random.default_rng(seed).normal(size=64), jnp.float32)
+    frame, alpha = channel.make_frame(g, p_t, use_mr)
+    np.testing.assert_allclose(float(channel.frame_power(frame)), p_t,
+                               rtol=1e-4)
+
+
+def test_mean_removal_saves_power():
+    """alpha^az >= alpha when the projected gradient has a mean (eq. 19-22)."""
+    g = jnp.asarray(np.random.default_rng(0).normal(size=128) + 2.0,
+                    jnp.float32)
+    _, a_plain = channel.make_frame(g, 100.0, False)
+    _, a_mr = channel.make_frame(g, 100.0, True)
+    assert float(a_mr) > float(a_plain)
+
+
+def test_ps_normalize_inverts_noiseless():
+    g = jnp.asarray(np.random.default_rng(1).normal(size=64), jnp.float32)
+    for use_mr in (False, True):
+        frame, alpha = channel.make_frame(g, 37.0, use_mr)
+        # noiseless single device: y = frame
+        rec = channel.ps_normalize(frame, use_mr)
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(g),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_mac_superposition():
+    frames = jnp.ones((5, 16))
+    y = channel.mac_sum(frames, jax.random.PRNGKey(0), sigma2=0.0)
+    np.testing.assert_allclose(np.asarray(y), 5.0)
+    y2 = channel.mac_sum(frames, jax.random.PRNGKey(0), sigma2=1.0)
+    assert float(jnp.var(y2 - y)) > 0.1
+
+
+@pytest.mark.parametrize("schedule", power.SCHEDULES)
+def test_power_schedules_satisfy_average_constraint(schedule):
+    """(1/T) sum P_t <= P-bar (paper eq. 6/7)."""
+    ps = power.schedule_array(300, 200.0, schedule)
+    assert power.verify_average_power(ps, 200.0, tol=1e-3)
+    assert (ps > 0).all()
+
+
+def test_lh_hl_shapes():
+    lh = power.schedule_array(300, 200.0, "lh_steps")
+    hl = power.schedule_array(300, 200.0, "hl_steps")
+    np.testing.assert_allclose(lh[:100], 100.0)
+    np.testing.assert_allclose(lh[250:], 300.0)
+    np.testing.assert_allclose(hl[:100], 300.0)
+    stair = power.schedule_array(300, 200.0, "lh_stair")
+    assert stair[0] == pytest.approx(100.0)
+    assert stair[-1] == pytest.approx(300.0)
+    assert (np.diff(stair) >= -1e-6).all()

@@ -1,0 +1,105 @@
+"""Property tests (hypothesis) for the compression primitives (paper §III/IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+vec = st.integers(0, 2 ** 31 - 1).flatmap(
+    lambda seed: st.integers(8, 256).map(
+        lambda n: np.asarray(
+            np.random.default_rng(seed).normal(size=n), np.float32)))
+
+
+@given(vec, st.integers(1, 64))
+def test_topk_support_and_energy(v, k):
+    k = min(k, v.shape[0])
+    out = np.asarray(C.top_k_sparsify(jnp.asarray(v), k))
+    nz = np.count_nonzero(out)
+    assert nz <= v.shape[0]
+    # all kept entries are >= every dropped entry in magnitude
+    if nz and nz < v.shape[0]:
+        kept = np.abs(out[out != 0]).min()
+        dropped = np.abs(v[out == 0]).max() if (out == 0).any() else 0.0
+        assert kept >= dropped - 1e-6
+    # keeps at least k entries' energy (ties may add more)
+    assert nz >= min(k, np.count_nonzero(v))
+
+
+@given(vec, st.integers(1, 32))
+def test_error_feedback_conservation(v, k):
+    delta = np.roll(v, 3) * 0.5
+    g_ec = C.error_feedback(jnp.asarray(v), jnp.asarray(delta))
+    g_sp = C.top_k_sparsify(g_ec, min(k, v.shape[0]))
+    new_delta = C.residual(g_ec, g_sp)
+    np.testing.assert_allclose(np.asarray(g_sp + new_delta),
+                               v + delta, rtol=1e-5, atol=1e-6)
+
+
+@given(vec, st.integers(1, 16))
+def test_sbc_quantize_structure(v, q):
+    """D-DSGD quantizer output has a single nonzero magnitude (paper §III)."""
+    out = np.asarray(C.sbc_quantize(jnp.asarray(v), q, q_max=16))
+    mags = np.unique(np.abs(out[out != 0]))
+    assert len(mags) <= 1
+    if len(mags) == 1:
+        # the surviving side's sign is consistent
+        assert (out >= 0).all() or (out <= 0).all()
+
+
+@given(vec, st.integers(1, 16))
+def test_signsgd_values(v, q):
+    out = np.asarray(C.signsgd_compress(jnp.asarray(v), q, q_max=16))
+    assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+    assert np.count_nonzero(out) <= 16 + 8  # q_max plus magnitude ties
+
+
+def test_qsgd_unbiased():
+    v = jnp.asarray(np.random.default_rng(0).normal(size=64), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 600)
+    outs = jax.vmap(lambda k: C.qsgd_compress(v, 64, 64, 2, k))(keys)
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(v),
+                               atol=0.12)
+
+
+def test_bit_budget_and_q_schedule():
+    d, s, m, sigma2 = 7850, 3925, 25, 1.0
+    p = np.full(10, 500.0)
+    budgets = C.mac_bit_budget(s, m, p, sigma2)
+    assert (budgets > 0).all()
+    qs = C.digital_q_schedule(d, s, m, p, sigma2, scheme="d_dsgd")
+    assert (qs >= 0).all()
+    # chosen q fits the budget, q+1 does not
+    for q, b in zip(qs, budgets):
+        assert C.ddsgd_bits(d, np.asarray([float(q)]))[0] <= b + 1e-9
+        if q < d // 2:
+            assert C.ddsgd_bits(d, np.asarray([float(q + 1)]))[0] > b
+
+
+def test_more_power_more_bits():
+    d, s, m = 7850, 3925, 25
+    q_lo = C.digital_q_schedule(d, s, m, np.asarray([100.0]), 1.0)[0]
+    q_hi = C.digital_q_schedule(d, s, m, np.asarray([1000.0]), 1.0)[0]
+    assert q_hi >= q_lo
+
+
+@given(vec)
+def test_sampled_threshold_brackets_exact(v):
+    if v.shape[0] < 16:
+        return
+    k = max(1, v.shape[0] // 4)
+    tau_exact = float(C.topk_threshold(jnp.asarray(v), k))
+    tau_approx = float(C.sampled_topk_threshold(jnp.asarray(v), k,
+                                                jax.random.PRNGKey(0),
+                                                n_samples=v.shape[0]))
+    mag = np.sort(np.abs(v))
+    # approx threshold must be a plausible magnitude within the vector range
+    assert mag[0] - 1e-6 <= tau_approx <= mag[-1] + 1e-6
+    # with full sampling it should be close to the exact k-th magnitude
+    assert abs(tau_approx - tau_exact) <= (mag[-1] - mag[0]) * 0.3 + 1e-5

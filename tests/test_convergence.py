@@ -1,0 +1,66 @@
+"""Numerical checks of the §V convergence machinery (Lemmas 2-4, Thm 1)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import convergence as cv
+
+
+def test_chi2_quantile_known_values():
+    # chi2(df=1): median ~0.4549, 95% ~3.8415
+    assert cv.chi2_quantile(1, 0.5) == pytest.approx(0.4549, rel=1e-3)
+    assert cv.chi2_quantile(1, 0.95) == pytest.approx(3.8415, rel=1e-3)
+    # chi2(df=10): 95% ~18.307
+    assert cv.chi2_quantile(10, 0.95) == pytest.approx(18.307, rel=1e-3)
+
+
+def test_rho_scales_with_dim():
+    # ||u|| concentrates near sqrt(d): rho(delta) ~ sqrt(d) for small delta
+    r = cv.rho(1e-3, 7850)
+    assert math.sqrt(7850) < r < 1.2 * math.sqrt(7850)
+
+
+def test_lambda_and_sigma_max():
+    assert cv.lambda_val(100, 100) == 0.0
+    assert cv.lambda_val(100, 0) == 1.0
+    assert cv.sigma_max(7850, 3924) == pytest.approx(
+        math.sqrt(7850 / 3924) + 1, rel=1e-9)
+
+
+def test_vt_decreases_with_power_and_m():
+    base = dict(d=7850, k=1962, s_tilde=3923, sigma=1.0, g_bound=1.0)
+    v_low = cv.v_t(10, m=25, p_t=10.0, **base)
+    v_high = cv.v_t(10, m=25, p_t=1000.0, **base)
+    assert v_high < v_low
+    v_m10 = cv.v_t(10, m=10, p_t=100.0, **base)
+    v_m50 = cv.v_t(10, m=50, p_t=100.0, **base)
+    assert v_m50 < v_m10        # paper Remark 4: more devices help
+
+
+def test_sum_v_closed_form_matches_direct():
+    kw = dict(d=1000, k=500, s_tilde=499, m=10, sigma=1.0, g_bound=2.0,
+              delta_prob=1e-3)
+    T = 50
+    direct = sum(cv.v_t(t, p_t=200.0, **{k: v for k, v in kw.items()
+                                         if k != "delta_prob"},
+                        delta_prob=1e-3) for t in range(T))
+    closed = cv.sum_v_constant_power(T, p_avg=200.0, **kw)
+    assert closed == pytest.approx(direct, rel=1e-6)
+
+
+def test_theorem1_bound_vanishes_with_T():
+    """Pr{E_T} -> 0 as T grows (paper's asymptotic claim after eq. 42)."""
+    kw = dict(d=1000, k=900, s_tilde=950, m=25, sigma=0.1, g_bound=1.0)
+    c, eps, theta = 1.0, 1.0, 10.0
+    bounds = []
+    for T in (10_000, 100_000, 1_000_000):
+        sv = cv.sum_v_constant_power(T, p_avg=500.0, **kw)
+        eta = 0.5 * cv.eta_max(T, c, eps, kw["g_bound"], sv)
+        assert eta > 0, "eta ceiling must be positive in this regime"
+        b = cv.theorem1_bound(T, eta=eta, c_strong=c, eps=eps,
+                              g_bound=kw["g_bound"], sum_v=sv,
+                              theta_star_norm=theta)
+        bounds.append(b)
+    assert bounds[2] < bounds[0]
+    assert bounds[2] < 0.05

@@ -1,0 +1,78 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [  # (n_blocks, c, s_block)
+    (1, 128, 32),
+    (3, 256, 64),
+    (4, 512, 128),
+    (2, 384, 96),
+    (5, 64, 16),
+]
+
+
+@pytest.mark.parametrize("nb,c,sb", SHAPES)
+@pytest.mark.parametrize("rademacher", [True, False])
+def test_project_forward_matches_oracle(nb, c, sb, rademacher):
+    x = jax.random.normal(jax.random.PRNGKey(nb), (nb, c), jnp.float32)
+    yk = ops.ota_project(x, seed=11, s_block=sb, rademacher=rademacher,
+                         use_kernel=True)
+    yr = ops.ota_project(x, seed=11, s_block=sb, rademacher=rademacher,
+                         use_kernel=False)
+    assert yk.shape == (nb, sb)
+    np.testing.assert_allclose(yk, yr, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("nb,c,sb", SHAPES)
+@pytest.mark.parametrize("rademacher", [True, False])
+def test_project_transpose_matches_oracle(nb, c, sb, rademacher):
+    y = jax.random.normal(jax.random.PRNGKey(nb + 7), (nb, sb), jnp.float32)
+    tk = ops.ota_project_t(y, seed=11, c=c, rademacher=rademacher,
+                           use_kernel=True)
+    tr = ops.ota_project_t(y, seed=11, c=c, rademacher=rademacher,
+                           use_kernel=False)
+    assert tk.shape == (nb, c)
+    np.testing.assert_allclose(tk, tr, rtol=3e-5, atol=3e-5)
+
+
+def test_projection_adjoint():
+    """<A x, y> == <x, A^T y> for the generated operator."""
+    nb, c, sb = 3, 256, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (nb, c))
+    y = jax.random.normal(jax.random.PRNGKey(1), (nb, sb))
+    ax = ops.ota_project(x, seed=5, s_block=sb)
+    aty = ops.ota_project_t(y, seed=5, c=c)
+    np.testing.assert_allclose(float(jnp.vdot(ax, y)),
+                               float(jnp.vdot(x, aty)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,tile", [(1024, 256), (4096, 1 << 16), (999, 7)])
+def test_ef_sparsify_kernel(n, tile):
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    d = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    tau = 0.7
+    sk, dk = ops.ef_sparsify(g, d, tau, use_kernel=True)
+    sr, dr = ops.ef_sparsify(g, d, tau, use_kernel=False)
+    np.testing.assert_allclose(sk, sr)
+    np.testing.assert_allclose(dk, dr)
+    # EF conservation: g_sp + delta' == g + delta exactly
+    np.testing.assert_allclose(sk + dk, g + d, rtol=1e-6, atol=1e-6)
+
+
+def test_hash_statistics():
+    A = ref.block_matrix_ref(0, jnp.uint32(3), 256, 512, rademacher=False)
+    assert abs(float(A.mean())) < 5e-3
+    np.testing.assert_allclose(float(A.var() * 256), 1.0, rtol=5e-2)
+    Ar = ref.block_matrix_ref(0, jnp.uint32(3), 256, 512, rademacher=True)
+    assert set(np.unique(np.abs(np.asarray(Ar)))) == {np.float32(1 / 16.0)}
+
+
+def test_blocks_are_decorrelated():
+    a = ref.block_matrix_ref(0, jnp.uint32(1), 64, 128)
+    b = ref.block_matrix_ref(0, jnp.uint32(2), 64, 128)
+    corr = float(jnp.abs(jnp.vdot(a, b)) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    assert corr < 0.1
