@@ -20,6 +20,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import OTAConfig
+from repro.core.schemes import PAPER_SCHEMES, SCHEME_REGISTRY  # noqa: F401
 from repro.data.synthetic import federated_split, make_classification
 from repro.train.paper_repro import run_federated
 
@@ -54,6 +55,10 @@ def dataset(iid: bool = True, m: Optional[int] = None,
 
 
 def ota(scheme: str, **kw) -> OTAConfig:
+    """Figure-scale OTAConfig for a registered scheme name."""
+    if scheme not in SCHEME_REGISTRY:
+        raise KeyError(f"unknown scheme {scheme!r}; registered: "
+                       f"{', '.join(sorted(SCHEME_REGISTRY))}")
     base = dict(scheme=scheme, s_frac=0.5, p_avg=500.0,
                 total_steps=SCALE.steps, projection="dense",
                 amp_iters=SCALE.amp_iters, mean_removal_steps=min(

@@ -1,12 +1,12 @@
 """Paper Fig. 2: test accuracy of all five schemes, IID and non-IID."""
-from benchmarks.common import SCALE, dataset, emit, ota, run_series
+from benchmarks.common import PAPER_SCHEMES, SCALE, dataset, emit, ota, run_series
 
 
 def main(collect=None):
     rows, summary = [], []
     for iid, tag in ((True, "iid"), (False, "noniid")):
         dev, test = dataset(iid=iid)
-        for scheme in ("ideal", "a_dsgd", "d_dsgd", "signsgd", "qsgd"):
+        for scheme in PAPER_SCHEMES:
             r = run_series("fig2", f"{scheme}_{tag}", dev, test,
                            ota(scheme), rows=rows)
             summary.append((f"fig2_{scheme}_{tag}", r["us_per_call"],

@@ -3,9 +3,12 @@
 Run:  PYTHONPATH=src python examples/paper_repro.py [fig2|fig3|...|fig7|thm1]
       FULL=1 ... for the paper-scale settings (M=25, B=1000, T=300).
 """
+import os
 import sys
 
-from benchmarks import run as bench_run
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import run as bench_run  # noqa: E402
 
 if __name__ == "__main__":
     sys.argv = ["paper_repro"] + (sys.argv[1:] or ["fig2"])

@@ -16,14 +16,22 @@ from repro.train.paper_repro import run_federated
 x_dev, y_dev = federated_split(x_train, y_train, m=10, b=400, iid=True)
 
 # 2) the channel: s = d/2 uses of a Gaussian MAC, average power 500,
-#    A-DSGD = error feedback + top-k + compressive projection + AMP at the PS
+#    A-DSGD = error feedback + top-k + compressive projection + AMP at the PS.
+#    Every scheme name resolves through the registry in repro.core.schemes —
+#    register your own with @register_scheme("my_scheme") and it runs on all
+#    drivers (a_dsgd_fading adds a truncated-inversion Rayleigh MAC that way).
 adsgd = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
                   sigma2=1.0, total_steps=40, projection="dense",
                   amp_iters=20, mean_removal_steps=10)
+fading = OTAConfig(scheme="a_dsgd_fading", s_frac=0.5, k_frac=0.25,
+                   p_avg=500.0, sigma2=1.0, total_steps=40,
+                   projection="dense", amp_iters=20, mean_removal_steps=10,
+                   fading_threshold=0.3)
 ideal = OTAConfig(scheme="ideal", total_steps=40)
 
 # 3) train
-for name, cfg in (("error-free shared link", ideal), ("A-DSGD", adsgd)):
+for name, cfg in (("error-free shared link", ideal), ("A-DSGD", adsgd),
+                  ("A-DSGD (Rayleigh fading)", fading)):
     run = run_federated(x_dev, y_dev, x_test, y_test, cfg, steps=40,
                         lr=1e-3, eval_every=10)
     print(f"{name:24s} accuracy trajectory: "

@@ -148,8 +148,15 @@ class ArchConfig:
 
 @dataclass(frozen=True)
 class OTAConfig:
-    """Configuration of the gradient aggregation channel (paper §II-IV)."""
-    scheme: str = "a_dsgd"     # ideal | a_dsgd | d_dsgd | signsgd | qsgd
+    """Configuration of the gradient aggregation channel (paper §II-IV).
+
+    ``scheme`` names any entry of the scheme registry
+    (:mod:`repro.core.schemes`): the paper's ``ideal | a_dsgd | d_dsgd |
+    signsgd | qsgd`` plus registered extensions such as ``a_dsgd_fading``
+    (truncated-inversion Rayleigh MAC) and user schemes added with
+    ``@register_scheme``.
+    """
+    scheme: str = "a_dsgd"     # any registered scheme name
     # channel
     s_frac: float = 0.5        # s = s_frac * d channel uses per iteration
     sigma2: float = 1.0        # AWGN variance (sigma^2)
@@ -176,7 +183,8 @@ class OTAConfig:
     frame_dtype: str = "float32"   # bf16 halves the MAC psum payload
     shard_decode: bool = False     # split the redundant PS AMP across devices
     # beyond-paper channel model (follow-up [34]): block-flat Rayleigh fading
-    # with truncated channel inversion (simulation driver only)
+    # with truncated channel inversion.  ``fading="rayleigh"`` is the legacy
+    # spelling — it promotes scheme "a_dsgd" to "a_dsgd_fading" in get_scheme.
     fading: str = "none"           # none | rayleigh
     fading_threshold: float = 0.3
 

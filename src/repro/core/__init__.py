@@ -1,4 +1,14 @@
-from repro.core.aggregators import Aggregator, SCHEMES, make_aggregator  # noqa: F401
+from repro.core.schemes import (  # noqa: F401
+    MACContext, PAPER_SCHEMES, Scheme, get_scheme, register_scheme,
+    registered_schemes, round_sharded, round_simulated,
+)
+from repro.core.aggregators import Aggregator, make_aggregator  # noqa: F401  (deprecated shims)
 from repro.core.projection import (  # noqa: F401
     BlockedProjector, DenseProjector, make_projector,
 )
+
+
+def __getattr__(name: str):
+    if name == "SCHEMES":          # live view of the scheme registry
+        return registered_schemes()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

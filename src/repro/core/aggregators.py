@@ -1,207 +1,117 @@
-"""Gradient aggregation schemes (the paper's contribution, as a library).
+"""Deprecated pre-registry aggregation API (one-PR grace period).
 
-Every scheme is an encode/decode pair around the wireless MAC:
+The aggregation layer now lives in :mod:`repro.core.schemes`: every scheme
+is a registered class implementing ``init_state / encode / decode /
+channel_dim`` (plus slice hooks), resolved by ``get_scheme(cfg, d, m)`` and
+run by the generic drivers ``round_simulated`` / ``round_sharded`` /
+``distributed.sharded_round``.  This module keeps the old surface working:
 
-  * ``ideal``   — error-free shared link (paper's benchmark): y = sum g / M.
-  * ``a_dsgd``  — analog over-the-air (paper §IV): error feedback, top-k,
-                  compressive projection, power scaling, MAC superposition,
-                  AMP reconstruction; mean-removal variant (§IV-A).
-  * ``d_dsgd``  — digital (paper §III): error feedback + SBC quantization
-                  under the per-iteration MAC bit budget R_t (eq. 8/9).
-  * ``signsgd`` — SignSGD [16] adapted to the bit budget (eq. 43).
-  * ``qsgd``    — QSGD [2] adapted to the bit budget (eq. 44).
+  * :func:`make_aggregator` — returns an :class:`Aggregator` shim wrapping
+    the registry-resolved scheme.
+  * ``SCHEMES`` / ``ANALOG_SCHEMES`` / ``DIGITAL_SCHEMES`` — re-exported
+    name tuples (now derived from the registry).
 
-Two drivers share the same encode/decode:
-
-  * :meth:`Aggregator.round_simulated` — M devices on one host (paper-scale
-    benchmarks; the MAC is a sum over the leading axis).
-  * :meth:`Aggregator.round_sharded` — inside a partial-manual shard_map; the
-    MAC is ``lax.psum`` over the manual mesh axes (the TPU ICI plays the role
-    of the superposing wireless channel), with optional hierarchical groups
-    (``axis_index_groups``): intra-group aggregation is ideal (wired
-    datacenter links within an edge site), the MAC runs across groups.
+New code should import from ``repro.core.schemes`` directly; this shim will
+be removed next PR.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import OTAConfig
-from repro.core import channel, compression, power
-from repro.core.amp import amp_decode
-from repro.core.projection import BlockedProjector, DenseProjector, make_projector
-from repro.kernels import ops
+from repro.core import schemes as _schemes
+from repro.core.schemes import (  # noqa: F401  (re-exports)
+    MACContext, PAPER_SCHEMES, Scheme, get_scheme, register_scheme,
+    registered_schemes,
+)
 
-ANALOG_SCHEMES = ("a_dsgd",)
+ANALOG_SCHEMES = ("a_dsgd", "a_dsgd_fading")
 DIGITAL_SCHEMES = ("d_dsgd", "signsgd", "qsgd")
-SCHEMES = ("ideal",) + ANALOG_SCHEMES + DIGITAL_SCHEMES
 
 
-@dataclass(frozen=True)
+def __getattr__(name: str):
+    if name == "SCHEMES":          # live view of the registry
+        return registered_schemes()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 class Aggregator:
-    cfg: OTAConfig
-    d: int
-    m: int                                   # number of OTA devices
-    projector: Any = None                    # analog only
-    k: int = 0                               # analog sparsity level
-    p_sched: Any = None                      # (T,) float32 jnp array
-    q_sched: Any = None                      # (T,) int32 jnp array (digital)
-    q_max: int = 0                           # static top_k bound (digital)
+    """Deprecated facade over a registered :class:`~repro.core.schemes.Scheme`.
 
-    # ------------------------------------------------------------------ state
+    Exposes the pre-registry methods (``init_delta``, ``encode``, ``decode``,
+    ``round_simulated``, ``round_sharded``) by delegating to the scheme
+    object and the generic drivers.
+    """
+
+    def __init__(self, scheme: Scheme):
+        self.scheme = scheme
+
+    # -- old attribute surface ------------------------------------------------
+    @property
+    def cfg(self) -> OTAConfig:
+        return self.scheme.cfg
+
+    @property
+    def d(self) -> int:
+        return self.scheme.d
+
+    @property
+    def m(self) -> int:
+        return self.scheme.m
+
+    @property
+    def projector(self):
+        return getattr(self.scheme, "projector", None)
+
+    @property
+    def k(self) -> int:
+        return getattr(self.scheme, "k", 0)
+
+    @property
+    def p_sched(self):
+        return self.scheme.p_sched
+
+    @property
+    def q_sched(self):
+        return getattr(self.scheme, "q_sched", None)
+
+    @property
+    def q_max(self) -> int:
+        return getattr(self.scheme, "q_max", 0)
+
+    # -- old method surface ---------------------------------------------------
     def init_delta(self) -> jnp.ndarray:
-        """Per-device error accumulator Delta_m(0) = 0 (paper Alg. 1)."""
-        return jnp.zeros((self.d,), jnp.dtype(self.cfg.state_dtype))
+        return self.scheme.init_state()
 
-    # ----------------------------------------------------------------- encode
-    def encode(self, g: jnp.ndarray, delta: jnp.ndarray, step, key,
-               p_factor=1.0
+    def encode(self, g, delta, step, key, p_factor=1.0
                ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
-        """Per-device compression + frame construction. g: (d,) float32.
+        ctx = MACContext(m=self.scheme.m, p_factor=p_factor)
+        return self.scheme.encode(g, delta, step, key, ctx)
 
-        p_factor scales this device's usable received power (1.0 on the
-        AWGN MAC; h_m^2 under truncated-inversion fading, 0 in a deep fade).
-        """
-        cfg = self.cfg
-        scheme = cfg.scheme
-        g = g.astype(jnp.float32)
-        if scheme == "ideal":
-            return g, delta, {}
-        p_t = self.p_sched[jnp.minimum(step, self.p_sched.shape[0] - 1)]
-        p_t = p_t * jnp.asarray(p_factor, jnp.float32)
-        if scheme == "a_dsgd":
-            g_ec = g + delta.astype(jnp.float32)
-            if isinstance(self.projector, DenseProjector):
-                g_sp = compression.top_k_sparsify(g_ec, self.k)
-                new_delta = g_ec - g_sp
-            else:
-                tau = compression.sampled_topk_threshold(g_ec, self.k, key)
-                g_sp, new_delta = ops.ef_sparsify(
-                    g, delta.astype(jnp.float32), tau,
-                    use_kernel=cfg.use_kernel)
-            g_tilde = self.projector.project(g_sp)
-            use_mr = (jnp.asarray(step) < cfg.mean_removal_steps)
-            frame, alpha = channel.make_frame(g_tilde, p_t, use_mr)
-            metrics = {"alpha": alpha, "p_t": p_t,
-                       "frame_power": channel.frame_power(frame)}
-            return frame, new_delta.astype(delta.dtype), metrics
-        # digital schemes
-        q_t = self.q_sched[jnp.minimum(step, self.q_sched.shape[0] - 1)]
-        if scheme == "d_dsgd":
-            g_ec = g + delta.astype(jnp.float32)
-            v_q = compression.sbc_quantize(g_ec, q_t, self.q_max)
-            new_delta = g_ec - v_q
-            return v_q, new_delta.astype(delta.dtype), {"q_t": q_t, "p_t": p_t}
-        if scheme == "signsgd":
-            v_q = compression.signsgd_compress(g, q_t, self.q_max)
-            return v_q, delta, {"q_t": q_t, "p_t": p_t}
-        if scheme == "qsgd":
-            v_q = compression.qsgd_compress(g, q_t, self.q_max,
-                                            cfg.quant_bits, key)
-            return v_q, delta, {"q_t": q_t, "p_t": p_t}
-        raise ValueError(f"unknown scheme {scheme!r}")
+    def decode(self, y, step) -> jnp.ndarray:
+        return self.scheme.decode(y, step)
 
-    # ----------------------------------------------------------------- decode
-    def decode(self, y: jnp.ndarray, step) -> jnp.ndarray:
-        """PS-side reconstruction of the average gradient from the MAC output."""
-        cfg = self.cfg
-        if cfg.scheme == "ideal" or cfg.scheme in DIGITAL_SCHEMES:
-            return y / self.m
-        use_mr = (jnp.asarray(step) < cfg.mean_removal_steps)
-        y_body = channel.ps_normalize(y, use_mr)
-        return amp_decode(y_body, self.projector, cfg.amp_iters)
+    def round_simulated(self, grads, deltas, step, key):
+        return _schemes.round_simulated(self.scheme, grads, deltas, step, key)
 
-    # ------------------------------------------------------------ sim driver
-    def round_simulated(self, grads: jnp.ndarray, deltas: jnp.ndarray, step,
-                        key: jnp.ndarray):
-        """grads/deltas: (M, d). Returns (ghat, new_deltas, metrics)."""
-        m = grads.shape[0]
-        cfg = self.cfg
-        dev_keys = jax.random.split(jax.random.fold_in(key, 1), m)
-        analog = cfg.scheme in ANALOG_SCHEMES
-        if analog and cfg.fading == "rayleigh":
-            h = channel.rayleigh_gains(jax.random.fold_in(key, 2), m)
-            p_fac, active = channel.truncated_inversion_power(
-                h, cfg.fading_threshold)
-        else:
-            p_fac = jnp.ones((m,))
-            active = jnp.ones((m,), bool)
-        frames, new_deltas, metrics = jax.vmap(
-            lambda g, dl, kk, pf: self.encode(g, dl, step, kk, pf))(
-                grads, deltas, dev_keys, p_fac)
-        if analog:
-            frames = frames * active[:, None]
-            if cfg.scheme != "ideal" and cfg.fading != "none":
-                # a silent (deep-fade) device accumulates its whole update
-                new_deltas = jnp.where(active[:, None], new_deltas,
-                                       (grads + deltas).astype(new_deltas.dtype))
-            y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
-                                cfg.sigma2)
-        else:
-            y = jnp.sum(frames, axis=0)
-        ghat = self.decode(y, step)
-        metrics = {k: jnp.mean(v) for k, v in metrics.items()}
-        metrics["active_frac"] = jnp.mean(active.astype(jnp.float32))
-        return ghat, new_deltas, metrics
-
-    # ----------------------------------------------------- distributed driver
-    def round_sharded(self, g_local: jnp.ndarray, delta_local: jnp.ndarray,
-                      step, key: jnp.ndarray,
+    def round_sharded(self, g_local, delta_local, step, key,
                       axis_names: Sequence[str],
                       groups: Optional[Sequence[Sequence[int]]] = None,
-                      pre_average_groups: Optional[Sequence[Sequence[int]]] = None):
-        """One aggregation round inside a shard_map (manual axes = devices).
-
-        ``pre_average_groups``: optional axis_index_groups for the *ideal*
-        intra-site average (hierarchical edge-site mapping); the MAC psum then
-        runs over all manual devices and is divided by the group size.
-        """
-        axis_names = tuple(axis_names)
-        group_size = 1
-        if pre_average_groups is not None:
-            group_size = len(pre_average_groups[0])
-            g_local = jax.lax.psum(g_local, axis_names[-1],
-                                   axis_index_groups=pre_average_groups)
-            g_local = g_local / group_size
-        frame, new_delta, metrics = self.encode(g_local, delta_local, step, key)
-        y = frame
-        for ax in axis_names:
-            y = jax.lax.psum(y, ax)
-        if group_size > 1:
-            y = y / group_size       # identical frames within a site
-        if self.cfg.scheme in ANALOG_SCHEMES:
-            y = y + channel.awgn(key, y.shape, self.cfg.sigma2, y.dtype)
-        ghat = self.decode(y, step)
-        return ghat, new_delta, metrics
+                      pre_average_groups=None):
+        ctx = MACContext(
+            m=self.scheme.m, device_axes=tuple(axis_names),
+            groups=(tuple(tuple(g) for g in pre_average_groups)
+                    if pre_average_groups is not None else None))
+        return _schemes.round_sharded(self.scheme, g_local, delta_local,
+                                      step, key, ctx)
 
 
 def make_aggregator(cfg: OTAConfig, d: int, m: int) -> Aggregator:
-    """Build an Aggregator: precompute projector + power/bit schedules."""
-    p_np = power.schedule_array(cfg.total_steps, cfg.p_avg, cfg.power_schedule)
-    p_sched = jnp.asarray(p_np, jnp.float32)
-    projector = None
-    k = 0
-    q_sched = None
-    q_max = 0
-    if cfg.scheme == "a_dsgd":
-        projector = make_projector(cfg, d)
-        if isinstance(projector, DenseProjector):
-            k = cfg.k_for(d)
-        else:
-            # blocked: k scales with the realised channel dimension
-            k = max(1, int(cfg.k_frac * projector.out_dim))
-    elif cfg.scheme in DIGITAL_SCHEMES:
-        s = cfg.s_for(d)
-        q_cap = min(d // 2, 1 << 16)
-        q_np = compression.digital_q_schedule(
-            d, s, m, p_np, cfg.sigma2, scheme=cfg.scheme, l_q=cfg.quant_bits,
-            q_cap=q_cap)
-        q_sched = jnp.asarray(q_np, jnp.int32)
-        q_max = int(max(int(q_np.max()), 1))
-    return Aggregator(cfg=cfg, d=d, m=m, projector=projector, k=k,
-                      p_sched=p_sched, q_sched=q_sched, q_max=q_max)
+    """Deprecated: use ``repro.core.schemes.get_scheme(cfg, d, m)``."""
+    warnings.warn("make_aggregator is deprecated; use "
+                  "repro.core.schemes.get_scheme", DeprecationWarning,
+                  stacklevel=2)
+    return Aggregator(get_scheme(cfg, d, m))

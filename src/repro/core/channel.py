@@ -1,5 +1,12 @@
 """The Gaussian MAC and the analog frame layout (paper §II, §IV, §IV-A).
 
+These primitives are consumed by the scheme classes and generic drivers in
+:mod:`repro.core.schemes`: analog schemes build frames with
+:func:`make_frame`, the simulated driver superposes them with
+:func:`mac_sum`, the sharded drivers draw their AWGN from :func:`awgn`, and
+the fading helpers at the bottom implement the ``a_dsgd_fading`` scheme's
+truncated channel inversion.
+
 Frame layout (static length = s_tilde + 2, covering both §IV variants):
 
     x_m = [ sqrt(a) * (g_tilde - mu * 1),  sqrt(a) * mu,  sqrt(a) ]

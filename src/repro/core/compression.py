@@ -204,13 +204,21 @@ def digital_q_schedule(d: int, s: int, m: int, p_ts: np.ndarray, sigma2: float,
                        q_cap: int | None = None) -> np.ndarray:
     """Host-precomputed q_t for every step of a digital scheme."""
     budgets = mac_bit_budget(s, m, p_ts, sigma2)
-    if scheme in ("d_dsgd", "ddsgd"):
-        fn = ddsgd_bits
-    elif scheme == "signsgd":
-        fn = signsgd_bits
-    elif scheme == "qsgd":
-        fn = lambda dd, q: qsgd_bits(dd, q, l_q)  # noqa: E731
-    else:
-        raise ValueError(scheme)
+    try:
+        fn = functools.partial(BIT_COSTS[scheme], l_q=l_q)
+    except KeyError:
+        raise ValueError(f"no bit-cost model for scheme {scheme!r}; known: "
+                         f"{', '.join(sorted(BIT_COSTS))}") from None
     return np.asarray([max_q_for_budget(d, float(b), fn, q_cap) for b in budgets],
                       np.int32)
+
+
+#: per-scheme bit-cost models r_t(q) used to size the q_t schedule; digital
+#: Scheme subclasses (repro.core.schemes) are looked up here by their
+#: registered name.
+BIT_COSTS = {
+    "d_dsgd": lambda d, q, l_q: ddsgd_bits(d, q),
+    "ddsgd": lambda d, q, l_q: ddsgd_bits(d, q),
+    "signsgd": lambda d, q, l_q: signsgd_bits(d, q),
+    "qsgd": lambda d, q, l_q: qsgd_bits(d, q, l_q),
+}

@@ -1,20 +1,28 @@
-"""Fully-sharded OTA aggregation phase (shard_map manual over data x model).
+"""Fully-sharded aggregation driver (shard_map manual over data x model).
 
 Phase 2 of the distributed train step (see train/trainer.py): every device
-owns a (d_pad / n_model) slice of its data-replica's gradient.  All of the
-paper's per-device pipeline is slice-local:
+owns a (d_pad / n_shards) slice of its data-replica's gradient.  This module
+provides the *generic* slice driver :func:`sharded_round` — it pre-averages
+edge-site groups, runs the scheme's ``encode_slice``, superposes the frame
+over the device axes (the MAC psum), injects AWGN for analog schemes, and
+hands the observation to ``decode_slice``.  All scheme-specific pipeline
+logic (EF -> threshold sparsify -> blocked projection -> power scaling ->
+per-block AMP for A-DSGD) lives on the scheme classes in
+:mod:`repro.core.schemes`; this driver never branches on a scheme name.
 
-  EF add -> threshold sparsify -> blocked projection -> power scaling
-  -> MAC psum over the device axes -> AWGN -> per-block AMP -> ghat slice
+Cross-shard coordination inside the A-DSGD hooks stays tiny and explicit:
+the top-k threshold gathers 65k |g| samples, the frame energy / mean / scale
+slots are scalar psums.  Per-shard measurement matrices derive from a
+shard-folded seed (the PS uses the same fold — consistency by construction).
+No d-sized tensor is ever replicated, gathered, or scanned across shards.
 
-Cross-shard coordination is tiny and explicit: the top-k threshold gathers
-65k |g| samples, the frame energy / mean / scale slots are scalar psums.
-Per-shard measurement matrices derive from a shard-folded seed (the PS uses
-the same fold — consistency by construction).  No d-sized tensor is ever
-replicated, gathered, or scanned across shards.
+The jnp helpers :func:`proj_forward` / :func:`amp_blocked` are the traced-
+seed blocked projection + AMP realisation (on TPU the Pallas kernels in
+kernels/ota_project.py implement the same tiling in VMEM).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -27,8 +35,7 @@ from repro.kernels import ref
 
 
 # ---------------------------------------------------------------------------
-# traced-seed blocked projection + AMP (the jnp/XLA realisation; on TPU the
-# Pallas kernels in kernels/ota_project.py implement the same tiling in VMEM)
+# traced-seed blocked projection + AMP (the jnp/XLA realisation)
 # ---------------------------------------------------------------------------
 
 
@@ -99,15 +106,89 @@ def amp_blocked(yb: jnp.ndarray, seed_u32, c: int, iters: int,
     return xs.reshape(-1, c)[:n_blocks]
 
 
-# ---------------------------------------------------------------------------
-# the sharded aggregation round
-# ---------------------------------------------------------------------------
-
-
-def _psum_all(x, axes: Sequence[str]):
+def psum_all(x, axes: Sequence[str]):
     for ax in axes:
         x = jax.lax.psum(x, ax)
     return x
+
+
+# ---------------------------------------------------------------------------
+# the generic sharded-slice driver
+# ---------------------------------------------------------------------------
+
+
+def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
+                  step, key, ctx) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """One aggregation round on gradient slices for any scheme with slice
+    hooks (manual over ``ctx.device_axes`` + ``ctx.shard_axes``).
+
+    g_slice, delta_slice: (d_local,) — this device-replica's shard of the
+    ctx.d_pad-dim vector; d_local = d_pad / n_shards.
+
+    The scheme's ``encode_slice`` returns a frame dict with a ``"body"``
+    array and optional ``"slots"`` scalars; this driver psums both over the
+    device axes (the MAC superposition — the body optionally in
+    ``ctx.frame_dtype``, e.g. bf16: its quantisation noise is far below the
+    channel AWGN sigma^2), adds AWGN once per channel slice when the scheme
+    is analog, and calls ``decode_slice`` on the observation.
+    """
+    from repro.core.schemes import device_fading, shard_info
+    if ctx.key_salt:
+        key = jax.random.fold_in(key, ctx.key_salt)
+    g_slice = g_slice.astype(jnp.float32)
+    group_size = ctx.group_size
+    if ctx.groups is not None:
+        g_slice = jax.lax.psum(
+            g_slice, ctx.device_axes[-1],
+            axis_index_groups=[list(g) for g in ctx.groups]) / group_size
+
+    if scheme.analog:
+        # per-device fading draw (same h on every shard of a device-replica:
+        # the key is folded with the device index, not the shard index)
+        p_factor, active = device_fading(scheme, key, ctx)
+        ctx = ctx.with_p_factor(p_factor)
+    frame, new_delta, metrics = scheme.encode_slice(
+        g_slice, delta_slice, step, key, ctx)
+    if scheme.analog:
+        frame = {k: (v * active.astype(v.dtype) if v is not None else None)
+                 for k, v in frame.items()}
+        new_delta = jnp.where(active, new_delta,
+                              scheme.silent_state(g_slice, delta_slice,
+                                                  new_delta))
+
+    # --- the MAC: superposition over device axes + AWGN ---------------------
+    body = frame["body"]
+    if ctx.frame_dtype is not None and scheme.analog:
+        # the narrow-psum optimisation only applies to analog frames, whose
+        # quantisation noise hides under the channel AWGN; non-analog
+        # aggregation (ideal benchmark, digital) stays exact in f32
+        body = body.astype(ctx.frame_dtype)
+    y_body = psum_all(body, ctx.device_axes).astype(jnp.float32)
+    slots = frame.get("slots")
+    y_slots = (psum_all(slots, ctx.device_axes)
+               if slots is not None else None)
+    if group_size > 1:
+        y_body = y_body / group_size
+        if y_slots is not None:
+            y_slots = y_slots / group_size
+    if scheme.analog:
+        shard_idx, n_shards = shard_info(ctx.shard_axes)
+        body_key = jax.random.fold_in(key, shard_idx.astype(jnp.int32))
+        y_body = y_body + channel.awgn(body_key, y_body.shape,
+                                       scheme.cfg.sigma2)
+        if y_slots is not None:
+            slot_key = jax.random.fold_in(key, n_shards + 7)
+            y_slots = y_slots + channel.awgn(slot_key, y_slots.shape,
+                                            scheme.cfg.sigma2)
+
+    ghat_slice = scheme.decode_slice({"body": y_body, "slots": y_slots},
+                                     step, ctx)
+    return ghat_slice, new_delta, metrics
+
+
+# ---------------------------------------------------------------------------
+# deprecated pre-registry entry point (one-PR grace period)
+# ---------------------------------------------------------------------------
 
 
 def sharded_ota_round(g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
@@ -122,120 +203,21 @@ def sharded_ota_round(g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
                       frame_dtype=None,
                       shard_decode: bool = False
                       ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
-    """One A-DSGD round on gradient slices (manual over device+shard axes).
-
-    g_slice, delta_slice: (d_local,) — this device-replica's shard of the
-    d_pad-dim vector; d_local = d_pad / n_shards.
-
-    Optimisation knobs (§Perf, all default off = paper-faithful baseline):
-      p_scale      — fraction of P_t granted to this sub-frame (sliced layout
-                     splits power between sharded/replicated sub-vectors)
-      frame_dtype  — psum the MAC body in bf16 (quantisation noise is far
-                     below the channel AWGN sigma^2)
-      shard_decode — split the redundant PS AMP across the device axes and
-                     all-gather the decoded slices (compute / M for +slice
-                     bytes of collective)
-    """
-    shard_axes = tuple(shard_axes)
-    n_shards = 1
-    shard_idx = jnp.zeros((), jnp.uint32)
-    for ax in shard_axes:
-        sz = jax.lax.axis_size(ax)
-        shard_idx = shard_idx * sz + jax.lax.axis_index(ax).astype(jnp.uint32)
-        n_shards *= sz
-    key = jax.random.fold_in(key, key_salt) if key_salt else key
-    d_local = g_slice.shape[0]
-    g_slice = g_slice.astype(jnp.float32)
-    group_size = 1
-    if pre_average_groups is not None:
-        group_size = len(pre_average_groups[0])
-        g_slice = jax.lax.psum(g_slice, device_axes[-1],
-                               axis_index_groups=pre_average_groups) / group_size
-
-    # --- error feedback + sampled global threshold -------------------------
-    g_ec = g_slice + delta_slice.astype(jnp.float32)
-    k = max(1, int(cfg.k_frac * cfg.s_frac * d_pad))
-    stride = max(1, d_local // sample_per_shard)
-    n_s = d_local // stride
-    local_sample = jnp.abs(jax.lax.slice_in_dim(g_ec, 0, n_s * stride,
-                                                stride, axis=0))
-    all_samples = (jax.lax.all_gather(local_sample, shard_axes).reshape(-1)
-                   if shard_axes else local_sample)
-    q = 1.0 - k / d_pad
-    tau = jnp.quantile(all_samples, q)
-    keep = jnp.abs(g_ec) >= tau
-    g_sp = jnp.where(keep, g_ec, 0.0)
-    new_delta = (g_ec - g_sp).astype(delta_slice.dtype)
-
-    # --- blocked projection (per-shard folded seed) -------------------------
-    c = cfg.block_size
-    s_block = max(2, int(round(cfg.s_frac * c)))
-    n_blocks_local = d_local // c
-    seed_u32 = ref.splitmix32(jnp.uint32(cfg.seed)
-                              ^ shard_idx.astype(jnp.uint32))
-    yb = proj_forward(g_sp.reshape(n_blocks_local, c), seed_u32, s_block,
-                      chunk_blocks)                      # (nb_local, s_block)
-
-    # --- power scaling (paper eq. 13/22; scalars psum'd over shards) -------
-    p_t = p_sched[jnp.minimum(step, p_sched.shape[0] - 1)] * p_scale
-    use_mr = (jnp.asarray(step) < cfg.mean_removal_steps).astype(jnp.float32)
-    s_tilde = float((d_pad // c) * s_block)              # global channel dim
-    local_sum = jnp.sum(yb)
-    mu = use_mr * _psum_all(local_sum, shard_axes) / s_tilde
-    local_energy = jnp.sum(yb * yb)
-    energy = _psum_all(local_energy, shard_axes)
-    energy_az = energy - (s_tilde - 1.0) * mu * mu + 1.0
-    alpha = p_t / jnp.maximum(energy_az, 1e-12)
-    ra = jnp.sqrt(alpha)
-    body_local = ra * (yb - mu)
-    mu_slot = ra * mu
-    scale_slot = ra
-
-    # --- the MAC: superposition over device axes + AWGN ---------------------
-    if frame_dtype is not None:
-        body_local = body_local.astype(frame_dtype)
-    y_mac = _psum_all(body_local, device_axes).astype(jnp.float32)
-    mu_mac = _psum_all(mu_slot, device_axes)
-    scale_mac = _psum_all(scale_slot, device_axes)
-    if group_size > 1:
-        y_mac, mu_mac, scale_mac = (t / group_size
-                                    for t in (y_mac, mu_mac, scale_mac))
-    body_key = jax.random.fold_in(key, shard_idx.astype(jnp.int32))
-    y_mac = y_mac + channel.awgn(body_key, y_mac.shape, cfg.sigma2)
-    slot_key = jax.random.fold_in(key, n_shards + 7)
-    zslots = channel.awgn(slot_key, (2,), cfg.sigma2)
-    mu_mac = mu_mac + zslots[0]
-    scale_mac = scale_mac + zslots[1]
-
-    # --- PS: normalise + AMP -------------------------------------------------
-    scale = jnp.where(jnp.abs(scale_mac) > 1e-12, scale_mac, 1.0)
-    y_norm = (y_mac + use_mr * mu_mac) / scale
-    if shard_decode and device_axes:
-        # the y slice is identical on every device row after the psum —
-        # decode 1/M of its blocks per row and all-gather the results
-        n_rows = 1
-        row_idx = jnp.zeros((), jnp.int32)
-        for ax in device_axes:
-            sz = jax.lax.axis_size(ax)
-            row_idx = row_idx * sz + jax.lax.axis_index(ax)
-            n_rows *= sz
-        nb = y_norm.shape[0]
-        nb_pad = -(-nb // n_rows) * n_rows
-        y_p = jnp.pad(y_norm, ((0, nb_pad - nb), (0, 0)))
-        per = nb_pad // n_rows
-        y_mine = jax.lax.dynamic_slice_in_dim(y_p, row_idx * per, per, 0)
-        # block ids must stay global: offset the hash ids via a row-salted
-        # projector is WRONG (encode used global ids) -> decode with global
-        # ids by passing an id offset through amp_blocked_offset
-        x_mine = amp_blocked(y_mine, seed_u32, c, cfg.amp_iters,
-                             chunk_blocks,
-                             id_offset=(row_idx * per).astype(jnp.uint32))
-        xg = jax.lax.all_gather(x_mine, device_axes, tiled=True)
-        ghat_slice = xg[:nb].reshape(-1)
-    else:
-        ghat_slice = amp_blocked(y_norm, seed_u32, c, cfg.amp_iters,
-                                 chunk_blocks).reshape(-1)
-    metrics = {"alpha": alpha, "p_t": p_t, "tau": tau,
-               "frame_power": alpha * (energy - (s_tilde - 1.0) * mu * mu
-                                       + 1.0)}
-    return ghat_slice, new_delta, metrics
+    """Deprecated: build an A-DSGD scheme + MACContext and call
+    :func:`sharded_round` instead (repro.core.schemes.get_scheme)."""
+    from repro.core.schemes import ADSGDScheme, MACContext
+    warnings.warn("sharded_ota_round is deprecated; use "
+                  "repro.core.distributed.sharded_round with a Scheme from "
+                  "repro.core.schemes.get_scheme", DeprecationWarning,
+                  stacklevel=2)
+    scheme = ADSGDScheme(cfg, d_pad, m_devices)
+    scheme.p_sched = p_sched
+    ctx = MACContext(
+        m=m_devices, device_axes=tuple(device_axes),
+        shard_axes=tuple(shard_axes),
+        groups=(tuple(tuple(g) for g in pre_average_groups)
+                if pre_average_groups is not None else None),
+        d_pad=d_pad, p_scale=p_scale, key_salt=key_salt,
+        sample_per_shard=sample_per_shard, chunk_blocks=chunk_blocks,
+        frame_dtype=frame_dtype, shard_decode=shard_decode)
+    return sharded_round(scheme, g_slice, delta_slice, step, key, ctx)

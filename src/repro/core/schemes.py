@@ -1,0 +1,581 @@
+"""Pluggable aggregation schemes: one encode/decode contract for every MAC.
+
+The paper contributes a *family* of gradient aggregation schemes over a
+shared wireless multiple-access channel (ideal, A-DSGD, D-DSGD, SignSGD,
+QSGD), and the follow-up work adds channel variants (Rayleigh fading with
+truncated inversion).  This module makes the family extensible: each scheme
+is a class implementing the :class:`Scheme` contract
+
+    init_state(d)              -- per-device error accumulator Delta_m(0)
+    encode(g, state, step, key, ctx)   -- device-side compression + frame
+    decode(y, step, ctx)       -- PS-side reconstruction from the MAC output
+    channel_dim(d)             -- channel uses consumed per round
+
+registered under a name with :func:`register_scheme` and resolved from an
+``OTAConfig`` via :func:`get_scheme`.  Schemes that support the fully-sharded
+slice driver additionally implement ``encode_slice`` / ``decode_slice``
+(see :mod:`repro.core.distributed`).
+
+Three generic drivers run *any* registered scheme without per-scheme
+branches (scheme behaviour is expressed through the hooks, never through
+name dispatch):
+
+  * :func:`round_simulated` -- M devices on one host; the MAC is a sum over
+    the leading axis (paper-scale benchmarks).
+  * :func:`round_sharded`   -- inside a shard_map; the MAC is ``lax.psum``
+    over the manual mesh axes (the TPU ICI plays the superposing channel).
+  * :func:`repro.core.distributed.sharded_round` -- fully-sharded slices;
+    every device owns ``d_pad / n_shards`` entries, nothing d-sized is ever
+    replicated.
+
+Topology facts (device axes, shard axes, group structure, per-device fading
+power factor, perf knobs) travel in an explicit :class:`MACContext` so the
+same scheme object serves all three drivers.
+
+Registering a new scheme takes ~10 lines::
+
+    @register_scheme("a_dsgd_fading")
+    class ADSGDFadingScheme(ADSGDScheme):
+        def device_factors(self, key, m):
+            h = channel.rayleigh_gains(key, m)
+            return channel.truncated_inversion_power(
+                h, self.cfg.fading_threshold)
+
+        def silent_state(self, g, state, new_state):
+            return (g + state).astype(new_state.dtype)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any, Dict, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OTAConfig
+from repro.core import channel, compression, power
+from repro.core.amp import amp_decode
+from repro.core.projection import DenseProjector, make_projector
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# MAC context: where a round runs (axes, groups, fading, perf knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MACContext:
+    """Topology and channel context threaded through encode/decode.
+
+    One context describes one placement of the MAC: which mesh axes act as
+    OTA devices, which shard the d-vector, how devices group into edge
+    sites, and the per-device received-power factor (1.0 on the AWGN MAC;
+    ``h_m^2`` under truncated-inversion fading, 0 in a deep fade).
+    """
+    m: int = 1                                   # effective OTA device count
+    device_axes: Tuple[str, ...] = ()            # manual axes = MAC users
+    shard_axes: Tuple[str, ...] = ()             # manual axes sharding d
+    groups: Optional[Tuple[Tuple[int, ...], ...]] = None   # edge-site groups
+    fading: str = "none"                         # descriptive channel model
+    p_factor: Any = 1.0                          # received-power scale (traced)
+    # slice-driver geometry / perf knobs (defaults = paper-faithful)
+    d_pad: int = 0                               # global padded dimension
+    p_scale: float = 1.0                         # power share of this frame
+    key_salt: int = 0                            # decorrelates sub-frames
+    sample_per_shard: int = 4096                 # threshold sample budget
+    chunk_blocks: int = 8                        # A-matrix working set
+    frame_dtype: Any = None                      # psum analog bodies in bf16
+    shard_decode: bool = False                   # split PS AMP across devices
+
+    @property
+    def group_size(self) -> int:
+        return len(self.groups[0]) if self.groups else 1
+
+    def with_p_factor(self, p_factor) -> "MACContext":
+        return dataclasses.replace(self, p_factor=p_factor)
+
+
+def axis_size(ax: str) -> int:
+    """Static size of a manual mesh axis (portable across jax versions)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
+
+def shard_info(shard_axes: Sequence[str]):
+    """(shard_idx, n_shards) of the calling device along the manual axes."""
+    n_shards = 1
+    shard_idx = jnp.zeros((), jnp.uint32)
+    for ax in shard_axes:
+        sz = axis_size(ax)
+        shard_idx = shard_idx * sz + jax.lax.axis_index(ax).astype(jnp.uint32)
+        n_shards *= sz
+    return shard_idx, n_shards
+
+
+# ---------------------------------------------------------------------------
+# the Scheme contract + registry
+# ---------------------------------------------------------------------------
+
+SCHEME_REGISTRY: Dict[str, Type["Scheme"]] = {}
+
+#: the five schemes evaluated in the paper's §VI figures
+PAPER_SCHEMES = ("ideal", "a_dsgd", "d_dsgd", "signsgd", "qsgd")
+
+
+def register_scheme(name: str):
+    """Class decorator: register a Scheme subclass under ``name``."""
+    def deco(cls: Type["Scheme"]) -> Type["Scheme"]:
+        cls.name = name
+        SCHEME_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_scheme(cfg: OTAConfig, d: int, m: int) -> "Scheme":
+    """Resolve ``cfg.scheme`` through the registry and build the scheme.
+
+    Back-compat promotion: ``scheme="a_dsgd"`` with ``fading="rayleigh"``
+    (the pre-registry spelling) resolves to the ``a_dsgd_fading`` scheme.
+    """
+    name = cfg.scheme
+    if name == "a_dsgd" and cfg.fading == "rayleigh":
+        name = "a_dsgd_fading"
+    try:
+        cls = SCHEME_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scheme {name!r}; registered: "
+            f"{', '.join(sorted(SCHEME_REGISTRY))}") from None
+    return cls(cfg, d, m)
+
+
+class Scheme:
+    """Base class: common state/schedule plumbing + the generic hooks.
+
+    Subclasses override :meth:`encode` / :meth:`decode` (and optionally the
+    slice hooks and the fading hooks).  ``analog`` schemes superpose real
+    frames on the Gaussian MAC (AWGN added by the driver); non-analog
+    schemes (ideal benchmark, digital baselines) aggregate noiselessly —
+    their channel impairment is the bit budget baked into the q schedule.
+    """
+
+    name: str = "?"
+    analog: bool = False
+
+    def __init__(self, cfg: OTAConfig, d: int, m: int):
+        self.cfg = cfg
+        self.d = d
+        self.m = m
+        self._p_np = power.schedule_array(cfg.total_steps, cfg.p_avg,
+                                          cfg.power_schedule)
+        self.p_sched = jnp.asarray(self._p_np, jnp.float32)
+
+    # ------------------------------------------------------------- state
+    def init_state(self, d: Optional[int] = None) -> jnp.ndarray:
+        """Per-device error accumulator Delta_m(0) = 0 (paper Alg. 1)."""
+        return jnp.zeros((self.d if d is None else d,),
+                         jnp.dtype(self.cfg.state_dtype))
+
+    def channel_dim(self, d: Optional[int] = None) -> int:
+        """Channel uses consumed per round for a d-dim gradient."""
+        raise NotImplementedError
+
+    def p_t(self, step, p_factor=1.0) -> jnp.ndarray:
+        """P_t for this step, scaled by the device's received-power factor."""
+        p = self.p_sched[jnp.minimum(step, self.p_sched.shape[0] - 1)]
+        return p * jnp.asarray(p_factor, jnp.float32)
+
+    # ----------------------------------------------------- fading hooks
+    def device_factors(self, key: jnp.ndarray, m: int):
+        """(received-power factor, participation mask) per device."""
+        return jnp.ones((m,)), jnp.ones((m,), bool)
+
+    def silent_state(self, g: jnp.ndarray, state: jnp.ndarray,
+                     new_state: jnp.ndarray) -> jnp.ndarray:
+        """Error state of a non-participating (deep-fade) device."""
+        return new_state
+
+    # ---------------------------------------------------- encode/decode
+    def encode(self, g: jnp.ndarray, state: jnp.ndarray, step, key,
+               ctx: Optional[MACContext] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Device-side: (d,) gradient -> channel frame. Returns
+        ``(frame, new_state, metrics)``."""
+        raise NotImplementedError
+
+    def decode(self, y: jnp.ndarray, step,
+               ctx: Optional[MACContext] = None) -> jnp.ndarray:
+        """PS-side: MAC output -> average-gradient estimate."""
+        m = ctx.m if ctx is not None else self.m
+        return y / m
+
+    # ------------------------------------------------------ slice hooks
+    # Optional: schemes that can run on gradient *slices* (the fully-
+    # sharded driver in core/distributed.py) implement these.  The frame is
+    # a dict with a "body" array (psum'd over the device axes, optionally
+    # in a narrow dtype) and optional "slots" scalars (always f32).
+    def encode_slice(self, g_slice, state_slice, step, key, ctx: MACContext):
+        raise NotImplementedError(
+            f"scheme {self.name!r} does not support the sharded slice "
+            "driver (needs a slice-local encode); use the simulated or "
+            "round_sharded drivers")
+
+    def decode_slice(self, y: Dict[str, jnp.ndarray], step, ctx: MACContext):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# ideal (error-free shared link, the paper's benchmark)
+# ---------------------------------------------------------------------------
+
+
+@register_scheme("ideal")
+class IdealScheme(Scheme):
+    """y = sum_m g_m / M over an error-free link."""
+
+    def channel_dim(self, d: Optional[int] = None) -> int:
+        return self.d if d is None else d
+
+    def encode(self, g, state, step, key, ctx=None):
+        return g.astype(jnp.float32), state, {}
+
+    # slice driver: the MAC psum *is* the aggregation
+    def encode_slice(self, g_slice, state_slice, step, key, ctx):
+        return {"body": g_slice}, state_slice, {"p_t": jnp.zeros(())}
+
+    def decode_slice(self, y, step, ctx):
+        return y["body"] / ctx.m
+
+
+# ---------------------------------------------------------------------------
+# A-DSGD (paper §IV): EF + top-k + compressive projection + analog MAC + AMP
+# ---------------------------------------------------------------------------
+
+
+@register_scheme("a_dsgd")
+class ADSGDScheme(Scheme):
+    """Analog DSGD: the paper's over-the-air scheme (§IV, §IV-A)."""
+
+    analog = True
+
+    @cached_property
+    def projector(self):
+        return make_projector(self.cfg, self.d)
+
+    @cached_property
+    def k(self) -> int:
+        if isinstance(self.projector, DenseProjector):
+            return self.cfg.k_for(self.d)
+        # blocked: k scales with the realised channel dimension
+        return max(1, int(self.cfg.k_frac * self.projector.out_dim))
+
+    def channel_dim(self, d: Optional[int] = None) -> int:
+        # body + mean slot + scale slot (static frame layout, channel.py)
+        if d is not None and d != self.d:
+            raise ValueError(
+                "an A-DSGD scheme's channel dimension is fixed by its "
+                f"projector (built for d={self.d}); call get_scheme with "
+                f"d={d} to size a different gradient")
+        return self.projector.out_dim + 2
+
+    def encode(self, g, state, step, key, ctx=None):
+        cfg = self.cfg
+        g = g.astype(jnp.float32)
+        p_t = self.p_t(step, ctx.p_factor if ctx is not None else 1.0)
+        g_ec = g + state.astype(jnp.float32)
+        if isinstance(self.projector, DenseProjector):
+            g_sp = compression.top_k_sparsify(g_ec, self.k)
+            new_state = g_ec - g_sp
+        else:
+            tau = compression.sampled_topk_threshold(g_ec, self.k, key)
+            g_sp, new_state = ops.ef_sparsify(
+                g, state.astype(jnp.float32), tau, use_kernel=cfg.use_kernel)
+        g_tilde = self.projector.project(g_sp)
+        use_mr = (jnp.asarray(step) < cfg.mean_removal_steps)
+        frame, alpha = channel.make_frame(g_tilde, p_t, use_mr)
+        metrics = {"alpha": alpha, "p_t": p_t,
+                   "frame_power": channel.frame_power(frame)}
+        return frame, new_state.astype(state.dtype), metrics
+
+    def decode(self, y, step, ctx=None):
+        use_mr = (jnp.asarray(step) < self.cfg.mean_removal_steps)
+        y_body = channel.ps_normalize(y, use_mr)
+        return amp_decode(y_body, self.projector, self.cfg.amp_iters)
+
+    # ------------------------------------------------------ slice hooks
+    # The fully-sharded pipeline (train/trainer.py phase 2): every device
+    # owns a (d_pad / n_shards) slice.  EF, thresholding, projection and the
+    # power scalars are slice-local; cross-shard coordination is a 65k-
+    # sample all_gather and scalar psums.  Per-shard measurement matrices
+    # derive from a shard-folded seed (the PS uses the same fold).
+
+    def _slice_seed(self, ctx: MACContext):
+        shard_idx, n_shards = shard_info(ctx.shard_axes)
+        return ref.splitmix32(jnp.uint32(self.cfg.seed)
+                              ^ shard_idx.astype(jnp.uint32)), shard_idx
+
+    def encode_slice(self, g_slice, state_slice, step, key, ctx):
+        from repro.core.distributed import proj_forward, psum_all
+        cfg = self.cfg
+        d_pad = ctx.d_pad
+        d_local = g_slice.shape[0]
+
+        # --- error feedback + sampled global threshold ---------------------
+        g_ec = g_slice + state_slice.astype(jnp.float32)
+        k = max(1, int(cfg.k_frac * cfg.s_frac * d_pad))
+        stride = max(1, d_local // ctx.sample_per_shard)
+        n_s = d_local // stride
+        local_sample = jnp.abs(jax.lax.slice_in_dim(g_ec, 0, n_s * stride,
+                                                    stride, axis=0))
+        all_samples = (jax.lax.all_gather(local_sample,
+                                          ctx.shard_axes).reshape(-1)
+                       if ctx.shard_axes else local_sample)
+        q = 1.0 - k / d_pad
+        tau = jnp.quantile(all_samples, q)
+        keep = jnp.abs(g_ec) >= tau
+        g_sp = jnp.where(keep, g_ec, 0.0)
+        new_state = (g_ec - g_sp).astype(state_slice.dtype)
+
+        # --- blocked projection (per-shard folded seed) --------------------
+        c = cfg.block_size
+        s_block = max(2, int(round(cfg.s_frac * c)))
+        n_blocks_local = d_local // c
+        seed_u32, _ = self._slice_seed(ctx)
+        yb = proj_forward(g_sp.reshape(n_blocks_local, c), seed_u32, s_block,
+                          ctx.chunk_blocks)              # (nb_local, s_block)
+
+        # --- power scaling (paper eq. 13/22; scalars psum'd over shards) ---
+        # ctx.p_factor carries this device's fading received-power factor
+        p_t = self.p_t(step, ctx.p_factor) * ctx.p_scale
+        use_mr = (jnp.asarray(step)
+                  < cfg.mean_removal_steps).astype(jnp.float32)
+        s_tilde = float((d_pad // c) * s_block)          # global channel dim
+        mu = use_mr * psum_all(jnp.sum(yb), ctx.shard_axes) / s_tilde
+        energy = psum_all(jnp.sum(yb * yb), ctx.shard_axes)
+        energy_az = energy - (s_tilde - 1.0) * mu * mu + 1.0
+        alpha = p_t / jnp.maximum(energy_az, 1e-12)
+        ra = jnp.sqrt(alpha)
+        frame = {"body": ra * (yb - mu), "slots": jnp.stack([ra * mu, ra])}
+        metrics = {"alpha": alpha, "p_t": p_t, "tau": tau,
+                   "frame_power": alpha * energy_az}
+        return frame, new_state, metrics
+
+    def decode_slice(self, y, step, ctx):
+        from repro.core.distributed import amp_blocked
+        cfg = self.cfg
+        body, slots = y["body"], y["slots"]
+        use_mr = (jnp.asarray(step)
+                  < cfg.mean_removal_steps).astype(jnp.float32)
+        scale = jnp.where(jnp.abs(slots[1]) > 1e-12, slots[1], 1.0)
+        y_norm = (body + use_mr * slots[0]) / scale
+        seed_u32, _ = self._slice_seed(ctx)
+        c = cfg.block_size
+        if ctx.shard_decode and ctx.device_axes:
+            # the y slice is identical on every device row after the psum —
+            # decode 1/M of its blocks per row and all-gather the results;
+            # block ids stay global via the id offset (encode used global
+            # ids, so a row-salted projector would be wrong).
+            n_rows = 1
+            row_idx = jnp.zeros((), jnp.int32)
+            for ax in ctx.device_axes:
+                sz = axis_size(ax)
+                row_idx = row_idx * sz + jax.lax.axis_index(ax)
+                n_rows *= sz
+            nb = y_norm.shape[0]
+            nb_pad = -(-nb // n_rows) * n_rows
+            y_p = jnp.pad(y_norm, ((0, nb_pad - nb), (0, 0)))
+            per = nb_pad // n_rows
+            y_mine = jax.lax.dynamic_slice_in_dim(y_p, row_idx * per, per, 0)
+            x_mine = amp_blocked(y_mine, seed_u32, c, cfg.amp_iters,
+                                 ctx.chunk_blocks,
+                                 id_offset=(row_idx * per).astype(jnp.uint32))
+            xg = jax.lax.all_gather(x_mine, ctx.device_axes, tiled=True)
+            return xg[:nb].reshape(-1)
+        return amp_blocked(y_norm, seed_u32, c, cfg.amp_iters,
+                           ctx.chunk_blocks).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# A-DSGD over a Rayleigh-fading MAC (follow-up [34]): truncated inversion
+# ---------------------------------------------------------------------------
+
+
+@register_scheme("a_dsgd_fading")
+class ADSGDFadingScheme(ADSGDScheme):
+    """A-DSGD under block-flat Rayleigh fading with truncated channel
+    inversion: devices below the fade threshold stay silent this round
+    (their whole update accumulates into the error state); the rest
+    pre-invert, so the usable received power becomes ``P_t * h_m^2``."""
+
+    def device_factors(self, key, m):
+        h = channel.rayleigh_gains(key, m)
+        return channel.truncated_inversion_power(h, self.cfg.fading_threshold)
+
+    def silent_state(self, g, state, new_state):
+        # a silent (deep-fade) device accumulates its whole update
+        return (g + state).astype(new_state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# digital baselines (paper §III, §VI): quantize to the MAC bit budget R_t
+# ---------------------------------------------------------------------------
+
+
+class _BitBudgetScheme(Scheme):
+    """Shared plumbing for the digital schemes: the per-step budget q_t is
+    precomputed on the host from the MAC capacity R_t (paper eq. 8/9)."""
+
+    def __init__(self, cfg: OTAConfig, d: int, m: int):
+        super().__init__(cfg, d, m)
+        s = cfg.s_for(d)
+        q_cap = min(d // 2, 1 << 16)
+        q_np = compression.digital_q_schedule(
+            d, s, m, self._p_np, cfg.sigma2, scheme=self.name,
+            l_q=cfg.quant_bits, q_cap=q_cap)
+        self.q_sched = jnp.asarray(q_np, jnp.int32)
+        self.q_max = int(max(int(q_np.max()), 1))
+
+    def channel_dim(self, d: Optional[int] = None) -> int:
+        return self.cfg.s_for(self.d if d is None else d)
+
+    def q_t(self, step) -> jnp.ndarray:
+        return self.q_sched[jnp.minimum(step, self.q_sched.shape[0] - 1)]
+
+    def encode(self, g, state, step, key, ctx=None):
+        g = g.astype(jnp.float32)
+        p_t = self.p_t(step, ctx.p_factor if ctx is not None else 1.0)
+        q_t = self.q_t(step)
+        v_q, new_state = self.compress(g, state, q_t, key)
+        return v_q, new_state, {"q_t": q_t, "p_t": p_t}
+
+    def compress(self, g, state, q_t, key):
+        raise NotImplementedError
+
+
+@register_scheme("d_dsgd")
+class DDSGDScheme(_BitBudgetScheme):
+    """Digital DSGD: error feedback + SBC quantization (paper §III)."""
+
+    def compress(self, g, state, q_t, key):
+        g_ec = g + state.astype(jnp.float32)
+        v_q = compression.sbc_quantize(g_ec, q_t, self.q_max)
+        return v_q, (g_ec - v_q).astype(state.dtype)
+
+
+@register_scheme("signsgd")
+class SignSGDScheme(_BitBudgetScheme):
+    """SignSGD [16] adapted to the bit budget (paper eq. 43)."""
+
+    def compress(self, g, state, q_t, key):
+        return compression.signsgd_compress(g, q_t, self.q_max), state
+
+
+@register_scheme("qsgd")
+class QSGDScheme(_BitBudgetScheme):
+    """QSGD [2] adapted to the bit budget (paper eq. 44)."""
+
+    def compress(self, g, state, q_t, key):
+        return compression.qsgd_compress(g, q_t, self.q_max,
+                                         self.cfg.quant_bits, key), state
+
+
+def registered_schemes() -> Tuple[str, ...]:
+    """Every registered scheme name (registration order), evaluated live."""
+    return tuple(SCHEME_REGISTRY)
+
+
+def __getattr__(name: str):
+    # SCHEMES is a live view of the registry: schemes registered after this
+    # module imported (e.g. user @register_scheme) still appear.
+    if name == "SCHEMES":
+        return registered_schemes()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# generic drivers (scheme-agnostic: behaviour comes from the hooks)
+# ---------------------------------------------------------------------------
+
+
+def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
+                    step, key: jnp.ndarray,
+                    ctx: Optional[MACContext] = None):
+    """M devices on one host. grads/deltas: (M, d). Returns
+    ``(ghat, new_deltas, metrics)``; the MAC is a sum over the leading axis
+    (plus AWGN for analog schemes)."""
+    m = grads.shape[0]
+    if ctx is None:
+        ctx = MACContext(m=scheme.m, fading=scheme.cfg.fading)
+    dev_keys = jax.random.split(jax.random.fold_in(key, 1), m)
+    p_fac, active = scheme.device_factors(jax.random.fold_in(key, 2), m)
+    frames, new_deltas, metrics = jax.vmap(
+        lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
+                                            ctx.with_p_factor(pf)))(
+            grads, deltas, dev_keys, p_fac)
+    if scheme.analog:
+        frames = frames * active[:, None]
+        new_deltas = jnp.where(active[:, None], new_deltas,
+                               scheme.silent_state(grads, deltas, new_deltas))
+        y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
+                            scheme.cfg.sigma2)
+    else:
+        y = jnp.sum(frames, axis=0)
+    ghat = scheme.decode(y, step, ctx)
+    metrics = {k: jnp.mean(v) for k, v in metrics.items()}
+    metrics["active_frac"] = jnp.mean(active.astype(jnp.float32))
+    return ghat, new_deltas, metrics
+
+
+def device_fading(scheme: Scheme, key: jnp.ndarray, ctx: MACContext):
+    """Per-device fading draw inside a shard_map: every manual device folds
+    its device index into the key (salt 2, matching round_simulated) and
+    draws its own (p_factor, active) from the scheme's fading hook."""
+    dev_idx, _ = shard_info(ctx.device_axes)
+    dev_key = jax.random.fold_in(jax.random.fold_in(key, 2),
+                                 dev_idx.astype(jnp.int32))
+    p_fac, active = scheme.device_factors(dev_key, 1)
+    return p_fac[0], active[0]
+
+
+def round_sharded(scheme: Scheme, g_local: jnp.ndarray,
+                  delta_local: jnp.ndarray, step, key: jnp.ndarray,
+                  ctx: MACContext):
+    """One aggregation round inside a shard_map (manual axes = devices).
+
+    ``ctx.groups``: optional axis_index_groups for the *ideal* intra-site
+    average (hierarchical edge-site mapping) over the last device axis; the
+    MAC psum then runs over all manual devices and is divided by the group
+    size (the scale slot absorbs any per-device alpha spread).
+    """
+    group_size = ctx.group_size
+    if ctx.groups is not None:
+        g_local = jax.lax.psum(g_local, ctx.device_axes[-1],
+                               axis_index_groups=[list(g) for g in ctx.groups])
+        g_local = g_local / group_size
+    # distinct salts for the three RNG consumers (matching round_simulated):
+    # fold 1 -> device-side encode randomness, fold 2 -> the fading draw,
+    # fold 0 -> the channel AWGN
+    if scheme.analog:
+        p_factor, active = device_fading(scheme, key, ctx)
+        ctx = ctx.with_p_factor(p_factor)
+    frame, new_delta, metrics = scheme.encode(
+        g_local, delta_local, step, jax.random.fold_in(key, 1), ctx)
+    if scheme.analog:
+        frame = frame * active.astype(frame.dtype)
+        new_delta = jnp.where(active, new_delta,
+                              scheme.silent_state(g_local, delta_local,
+                                                  new_delta))
+    y = frame
+    for ax in ctx.device_axes:
+        y = jax.lax.psum(y, ax)
+    if group_size > 1:
+        y = y / group_size
+    if scheme.analog:
+        y = y + channel.awgn(jax.random.fold_in(key, 0), y.shape,
+                             scheme.cfg.sigma2, y.dtype)
+    ghat = scheme.decode(y, step, ctx)
+    return ghat, new_delta, metrics

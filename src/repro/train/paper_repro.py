@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OTAConfig
-from repro.core.aggregators import Aggregator, make_aggregator
+from repro.core.schemes import get_scheme, round_simulated
 from repro.optim.optim import Optimizer
 
 
@@ -68,7 +68,7 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
     params = init_linear(dim, n_classes, key)
     flat0, unravel = jax.flatten_util.ravel_pytree(params)
     d = flat0.shape[0]
-    agg = make_aggregator(ota, d, m)
+    scheme = get_scheme(ota, d, m)
     opt = Optimizer(name=optimizer, lr=lr)
     opt_state = opt.init(params)
     deltas = jnp.zeros((m, d), jnp.float32)
@@ -102,7 +102,7 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
             grads = momenta_n
         else:
             momenta_n = momenta
-        ghat, deltas, met = agg.round_simulated(grads, deltas, t, kk)
+        ghat, deltas, met = round_simulated(scheme, grads, deltas, t, kk)
         params, opt_state = opt.apply(params, unravel(ghat), opt_state)
         return params, opt_state, deltas, momenta_n, met
 

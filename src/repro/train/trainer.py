@@ -4,11 +4,13 @@ Phase 1 (manual = ota_axes, auto = rest): per-OTA-device gradients — the loss
 is the LOCAL batch mean, so no cross-device reduction happens implicitly; the
 gradient pytree is flattened to a padded d-vector sharded over the auto axes.
 
-Phase 2 (manual = ota_axes + shard axes): the paper's aggregation pipeline on
-gradient *slices* — every device owns d_pad / n_shards entries of its
-replica's vector, nothing d-sized is replicated or gathered
-(core/distributed.sharded_ota_round).  The MAC superposition is the psum
-over ota_axes; AWGN is injected once per channel slice.
+Phase 2 (manual = ota_axes + shard axes): the scheme's aggregation pipeline
+on gradient *slices* — every device owns d_pad / n_shards entries of its
+replica's vector, nothing d-sized is replicated or gathered.  The scheme is
+resolved from the registry (repro.core.schemes.get_scheme) and run by the
+generic slice driver (core/distributed.sharded_round) under a MACContext
+describing the placement.  The MAC superposition is the psum over ota_axes;
+AWGN is injected once per channel slice.
 
 Phase 3 (auto): unravel ghat and apply the optimizer under GSPMD.
 
@@ -33,9 +35,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, OTAConfig, TrainConfig
-from repro.core import distributed, power
+from repro.core import distributed
+from repro.core.schemes import MACContext, get_scheme
 from repro.models import model as model_lib
 from repro.optim.optim import make_optimizer
+from repro.sharding import constrain, shard_map
 from repro.sharding.specs import param_specs
 
 
@@ -110,8 +114,15 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
         m_eff = npg * other
     opt = make_optimizer(train_cfg)
     compute_dtype = jnp.dtype(train_cfg.compute_dtype)
-    p_np = power.schedule_array(ota.total_steps, ota.p_avg, ota.power_schedule)
-    p_sched = jnp.asarray(p_np, jnp.float32)
+    scheme = get_scheme(ota, d_pad, m_eff)
+    agg_ctx = MACContext(
+        m=m_eff, device_axes=ota_axes, shard_axes=auto_axes,
+        groups=(tuple(tuple(g) for g in groups) if groups is not None
+                else None),
+        fading=ota.fading, d_pad=d_pad,
+        frame_dtype=(jnp.dtype(ota.frame_dtype)
+                     if ota.frame_dtype != "float32" else None),
+        shard_decode=ota.shard_decode)
     inner_spec = P(auto_axes) if auto_axes else P()
 
     # ---------------- phase 1: per-device grads ---------------------------
@@ -125,7 +136,7 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
                                                     has_aux=True)(params)
         gflat, _ = jax.flatten_util.ravel_pytree(grads)
         gflat = jnp.pad(gflat.astype(jnp.float32), (0, d_pad - d))
-        gflat = jax.lax.with_sharding_constraint(gflat, inner_spec)
+        gflat = constrain(gflat, mesh, inner_spec)
         loss_g = loss
         for ax in ota_axes:
             loss_g = jax.lax.psum(loss_g, ax)
@@ -134,23 +145,9 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
 
     # ---------------- phase 2: OTA aggregation on slices ------------------
     def agg_body(gflat_slice, delta_slice, step, key):
-        g = gflat_slice.reshape(-1)
-        dl = delta_slice.reshape(-1)
-        if ota.scheme == "ideal":
-            ghat = g
-            for ax in ota_axes:
-                ghat = jax.lax.psum(ghat, ax)
-            ghat = ghat / m_manual
-            return (ghat.reshape(gflat_slice.shape),
-                    delta_slice, {"p_t": jnp.zeros(())})
-        ghat, new_delta, metrics = distributed.sharded_ota_round(
-            g, dl, step, key, ota,
-            device_axes=ota_axes, shard_axes=auto_axes,
-            m_devices=m_eff, d_pad=d_pad, p_sched=p_sched,
-            pre_average_groups=groups,
-            frame_dtype=(jnp.dtype(ota.frame_dtype)
-                         if ota.frame_dtype != "float32" else None),
-            shard_decode=ota.shard_decode)
+        ghat, new_delta, metrics = distributed.sharded_round(
+            scheme, gflat_slice.reshape(-1), delta_slice.reshape(-1),
+            step, key, agg_ctx)
         return (ghat.reshape(gflat_slice.shape),
                 new_delta.reshape(delta_slice.shape), metrics)
 
@@ -171,13 +168,13 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
     rep = lambda t: jax.tree.map(lambda _: P(), t)              # noqa: E731
 
     def builder(batch_tree):
-        phase1 = jax.shard_map(
+        phase1 = shard_map(
             grads_body, mesh=mesh,
             in_specs=(rep(aparams),
                       jax.tree.map(lambda _: batch_spec, batch_tree)),
             out_specs=(P(*ota_axes, None), P()),
             axis_names=manual1, check_vma=False)
-        phase2 = jax.shard_map(
+        phase2 = shard_map(
             agg_body, mesh=mesh,
             in_specs=(delta_spec_full, delta_spec_full, P(), P()),
             out_specs=(P(None, auto_axes if auto_axes else None),
@@ -293,12 +290,24 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
 
     opt = make_optimizer(train_cfg)
     compute_dtype = jnp.dtype(train_cfg.compute_dtype)
-    p_np = power.schedule_array(ota.total_steps, ota.p_avg,
-                                ota.power_schedule)
-    p_sched = jnp.asarray(p_np, jnp.float32)
     frame_dtype = (jnp.dtype(ota.frame_dtype)
                    if ota.frame_dtype != "float32" else None)
     state_dtype = jnp.dtype(ota.state_dtype)
+    scheme = get_scheme(ota, d_sh_pad * model_size + d_rep_pad, m_eff)
+    groups_t = (tuple(tuple(g) for g in groups) if groups is not None
+                else None)
+    # two sub-frames: the model-sharded pieces and the replicated pieces,
+    # each with its own power share (sum = P_t) and decorrelated RNG salt
+    ctx_sh = MACContext(
+        m=m_eff, device_axes=ota_axes, shard_axes=("model",),
+        groups=groups_t, fading=ota.fading, d_pad=d_sh_pad * model_size,
+        p_scale=p_share_sh, frame_dtype=frame_dtype,
+        shard_decode=ota.shard_decode)
+    ctx_rep = MACContext(
+        m=m_eff, device_axes=ota_axes, shard_axes=(),
+        groups=groups_t, fading=ota.fading, d_pad=d_rep_pad,
+        p_scale=1.0 - p_share_sh, key_salt=1789, frame_dtype=frame_dtype,
+        shard_decode=ota.shard_decode)
 
     # ---------------- phase 1: per-device grads (tree out) ----------------
     def grads_body(params, batch):
@@ -310,8 +319,8 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
         (loss, metrics), grads = jax.value_and_grad(local_loss,
                                                     has_aux=True)(params)
         grads = jax.tree.map(
-            lambda g, s: jax.lax.with_sharding_constraint(
-                g.astype(jnp.float32), s), grads, pspecs)
+            lambda g, s: constrain(g.astype(jnp.float32), mesh, s),
+            grads, pspecs)
         loss_g = loss
         for ax in ota_axes:
             loss_g = jax.lax.psum(loss_g, ax)
@@ -332,19 +341,10 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
         g_rep = jnp.pad(_flatten_group(rep_leaves), (0, d_rep_pad - d_rep))
         dl_sh = delta_sh.reshape(-1)
         dl_rep = delta_rep.reshape(-1)
-        ghat_sh, nd_sh, met = distributed.sharded_ota_round(
-            g_sh, dl_sh, step, key, ota,
-            device_axes=ota_axes, shard_axes=("model",),
-            m_devices=m_eff, d_pad=d_sh_pad * model_size, p_sched=p_sched,
-            pre_average_groups=groups, p_scale=p_share_sh,
-            frame_dtype=frame_dtype, shard_decode=ota.shard_decode)
-        ghat_rep, nd_rep, _ = distributed.sharded_ota_round(
-            g_rep, dl_rep, step, key, ota,
-            device_axes=ota_axes, shard_axes=(),
-            m_devices=m_eff, d_pad=d_rep_pad, p_sched=p_sched,
-            pre_average_groups=groups, p_scale=1.0 - p_share_sh,
-            key_salt=1789, frame_dtype=frame_dtype,
-            shard_decode=ota.shard_decode)
+        ghat_sh, nd_sh, met = distributed.sharded_round(
+            scheme, g_sh, dl_sh, step, key, ctx_sh)
+        ghat_rep, nd_rep, _ = distributed.sharded_round(
+            scheme, g_rep, dl_rep, step, key, ctx_rep)
         # unflatten back into the gradient tree (local shapes)
         out, i_sh, i_rep = [], 0, 0
         p_sh, p_rep = ghat_sh[:d_sh], ghat_rep[:d_rep]
@@ -384,7 +384,7 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
     delta_rep_shape = dims + (d_rep_pad,)
 
     def builder(batch_tree):
-        phase1 = jax.shard_map(
+        phase1 = shard_map(
             grads_body, mesh=mesh,
             in_specs=(rep(aparams),
                       jax.tree.map(lambda _: batch_spec, batch_tree)),
@@ -394,7 +394,7 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
                    *([None] * len(l.shape)))
                  for _, l, _, _ in info]), P()),
             axis_names=set(ota_axes), check_vma=False)
-        phase2 = jax.shard_map(
+        phase2 = shard_map(
             agg_body, mesh=mesh,
             in_specs=(grads_specs, delta_sh_spec, delta_rep_spec, P(), P()),
             out_specs=(jax.tree.unflatten(treedef,

@@ -1,0 +1,45 @@
+"""Regenerate the fixed-seed parity goldens for tests/test_schemes.py.
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+The saved arrays pin the simulated-driver output (ghat, new_deltas) of every
+scheme at a fixed seed.  They were first generated from the pre-registry
+implementation (``Aggregator.encode`` if/elif chain), so the parity test
+proves the ``Scheme`` refactor is bitwise-identical to the seed code.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+from tests.golden.parity_cases import PARITY_CASES  # noqa: E402
+
+
+def main() -> None:
+    from repro.core.aggregators import make_aggregator
+
+    D, M = 256, 6
+    base = jax.random.normal(jax.random.PRNGKey(7), (D,))
+    grads = base[None, :] + 0.1 * jax.random.normal(jax.random.PRNGKey(4),
+                                                    (M, D))
+    deltas = jnp.zeros((M, D))
+    out = {"grads": np.asarray(grads)}
+    for name, cfg in PARITY_CASES.items():
+        agg = make_aggregator(cfg, D, M)
+        ghat, nd, _ = agg.round_simulated(grads, deltas, 0,
+                                          jax.random.PRNGKey(11))
+        out[f"{name}__ghat"] = np.asarray(ghat)
+        out[f"{name}__deltas"] = np.asarray(nd)
+        print(f"{name:16s} ghat[:3] = {np.asarray(ghat)[:3]}")
+    path = os.path.join(os.path.dirname(__file__), "simulated_parity.npz")
+    np.savez(path, **out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""The fixed-seed scheme configurations pinned by the parity goldens."""
+from repro.configs.base import OTAConfig
+
+PARITY_CASES = {
+    "ideal": OTAConfig(scheme="ideal", total_steps=10),
+    "a_dsgd_dense": OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25,
+                              p_avg=500.0, total_steps=10, projection="dense",
+                              amp_iters=10, mean_removal_steps=2),
+    "a_dsgd_blocked": OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25,
+                                p_avg=500.0, total_steps=10,
+                                projection="blocked", block_size=64,
+                                amp_iters=10, mean_removal_steps=2),
+    "a_dsgd_rayleigh": OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25,
+                                 p_avg=500.0, total_steps=10,
+                                 projection="dense", amp_iters=10,
+                                 mean_removal_steps=2, fading="rayleigh",
+                                 fading_threshold=0.9),
+    "d_dsgd": OTAConfig(scheme="d_dsgd", s_frac=0.5, p_avg=500.0,
+                        total_steps=10),
+    "signsgd": OTAConfig(scheme="signsgd", s_frac=0.5, p_avg=500.0,
+                         total_steps=10),
+    "qsgd": OTAConfig(scheme="qsgd", s_frac=0.5, p_avg=500.0, total_steps=10),
+}
