@@ -8,7 +8,7 @@ for benchmarks/run.py.
 Scale: the default is a CPU-sized rendition (the paper's exact d = 7850
 single-layer model, fewer devices/steps); ``FULL=1`` env restores the paper's
 M=25, B=1000, T=300 settings.  MNIST is replaced by the deterministic
-surrogate (DESIGN.md §7) — claims are validated in relative terms.
+surrogate (docs/DESIGN.md §7) — claims are validated in relative terms.
 """
 from __future__ import annotations
 

@@ -6,14 +6,19 @@ dry-run table rows).  FULL=1 env restores paper-scale settings.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
+# make `python benchmarks/run.py ...` work from the repo root (script mode
+# puts benchmarks/ itself on sys.path, not the package's parent)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
-    from benchmarks import (convergence_bound, fig2_schemes, fig3_power_alloc,
-                            fig4_power_sweep, fig5_bandwidth, fig6_devices,
-                            fig7_s_tradeoff, roofline)
+    from benchmarks import (bench_kernels, convergence_bound, fig2_schemes,
+                            fig3_power_alloc, fig4_power_sweep, fig5_bandwidth,
+                            fig6_devices, fig7_s_tradeoff, roofline)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "fig2": fig2_schemes.main,
@@ -24,6 +29,7 @@ def main() -> None:
         "fig7": fig7_s_tradeoff.main,
         "thm1": convergence_bound.main,
         "roofline": roofline.main,
+        "kernels": bench_kernels.main,
     }
     summary = []
     for name, fn in benches.items():

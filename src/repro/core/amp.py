@@ -12,6 +12,11 @@ synthetic k-sparse signals.
 
 The blocked variant runs an independent AMP per projection block (the
 block-diagonal A factorises the problem) — fully batched, shardable along d.
+:func:`amp_blocked_core` is the single chunked implementation behind every
+blocked decode: the on-the-fly A chunk is generated exactly ONCE per decode
+(vs 2*iters+1 times for launch-per-op decoding) and consumed by all
+iterations, either as a jnp ``lax.scan`` (XLA path) or inside the fused
+single-launch Pallas kernel (kernels/amp_fused.py, ``use_kernel=True``).
 """
 from __future__ import annotations
 
@@ -26,11 +31,20 @@ def soft_threshold(x: jnp.ndarray, tau) -> jnp.ndarray:
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
 
 
+def _debias_factor(num, den):
+    """Clamped LS rescale factor correcting the soft-threshold shrinkage.
+
+    Shrinkage can only make ||A x|| smaller than its LS fit to y, so the
+    correction is >= 1 by construction; raw factors < 1 (converged AMP — the
+    Onsager term has already debiased) or >> 1 (den -> 0 at very low SNR)
+    are noise fits and are clamped away.
+    """
+    return jnp.clip(num / jnp.maximum(den, 1e-12), 1.0, 2.0)
+
+
 def _ls_rescale(x: jnp.ndarray, ax: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Debias the soft-threshold shrinkage: scale x so A x best matches y."""
-    num = jnp.vdot(ax, y)
-    den = jnp.maximum(jnp.vdot(ax, ax), 1e-12)
-    return x * (num / den)
+    return x * _debias_factor(jnp.vdot(ax, y), jnp.vdot(ax, ax))
 
 
 def amp_decode_dense(y: jnp.ndarray, A: jnp.ndarray, iters: int = 20,
@@ -60,8 +74,11 @@ def amp_decode_blocked(yb: jnp.ndarray, projector, iters: int = 20,
                        debias: bool = True) -> jnp.ndarray:
     """Per-block AMP. yb: (n_blocks, s_block) -> flat (d,) estimate.
 
-    All matvecs go through the projector (on-the-fly A; Pallas on TPU), so
-    each AMP iteration is two batched kernel launches + pointwise math.
+    All matvecs go through the projector (on-the-fly A), so each AMP
+    iteration is two batched projection applications + pointwise math, and
+    every application regenerates A — 2*iters+1 generations per decode.
+    Prefer :func:`amp_blocked_core` (one generation per decode) unless the
+    whole A fits the working-set budget anyway.
     """
     n_blocks, s_block = yb.shape
     c = projector.block_size
@@ -81,36 +98,52 @@ def amp_decode_blocked(yb: jnp.ndarray, projector, iters: int = 20,
     if debias:
         axb = projector.project_blocks(xb)
         num = jnp.sum(axb * yb, axis=1, keepdims=True)
-        den = jnp.maximum(jnp.sum(axb * axb, axis=1, keepdims=True), 1e-12)
-        xb = xb * (num / den)
+        den = jnp.sum(axb * axb, axis=1, keepdims=True)
+        xb = xb * _debias_factor(num, den)
     return projector.from_blocks(xb)
 
 
-def amp_decode_blocked_scan(yb: jnp.ndarray, projector, iters: int = 20,
-                            threshold_mult: float = 1.3,
-                            debias: bool = True) -> jnp.ndarray:
-    """Chunked-scan AMP for large n_blocks: each A chunk is generated ONCE
-    and all AMP iterations for its blocks run against it inside the scan
-    body (blocks are independent sub-problems under the block-diagonal A).
-    A-generation cost is amortised over the iterations — the structure the
-    Pallas kernel realises in VMEM on TPU."""
+def amp_blocked_core(yb: jnp.ndarray, seed, c: int, iters: int = 20,
+                     chunk_blocks: int = 8, threshold_mult: float = 1.3,
+                     debias: bool = True, rademacher: bool = True,
+                     id_offset=0, use_kernel: bool = False) -> jnp.ndarray:
+    """Chunked per-block AMP with ONE A-generation per block per decode.
+
+    yb: (n_blocks, s_block) -> xb: (n_blocks, c).  ``seed`` and
+    ``id_offset`` (global index of this slice's first block — lets a device
+    decode a sub-range of blocks with the encoder's global block ids) may
+    be traced uint32 scalars.
+
+    ``use_kernel=False``: jnp ``lax.scan`` over chunks of ``chunk_blocks``
+    blocks; each chunk's A is generated once and all AMP iterations for its
+    blocks run against it inside the scan body (blocks are independent
+    sub-problems under the block-diagonal A), bounding the A working set.
+    ``use_kernel=True``: the same structure realised in VMEM by the fused
+    single-launch Pallas kernel (kernels/amp_fused.py).
+    """
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.amp_decode_fused(yb, seed=seed, c=c, iters=iters,
+                                    threshold_mult=threshold_mult,
+                                    debias=debias, rademacher=rademacher,
+                                    nb_tile=chunk_blocks,
+                                    id_offset=id_offset)
     from repro.kernels import ref
     n_blocks, s_block = yb.shape
-    c = projector.block_size
-    ni = projector.chunk_blocks
+    ni = min(chunk_blocks, n_blocks)
     pad = (-n_blocks) % ni
     yb_p = jnp.pad(yb, ((0, pad), (0, 0)))
     n_outer = (n_blocks + pad) // ni
     ys = yb_p.reshape(n_outer, ni, s_block)
-    ids = jnp.arange(n_outer * ni, dtype=jnp.uint32).reshape(n_outer, ni)
+    ids = (jnp.arange(n_outer * ni, dtype=jnp.uint32)
+           + jnp.asarray(id_offset, jnp.uint32)).reshape(n_outer, ni)
 
     def gen(b):
-        return ref.block_matrix_ref(projector.seed, b, s_block, c,
-                                    projector.rademacher)
+        return ref.block_matrix_ref(seed, b, s_block, c, rademacher)
 
     def chunk_amp(_, inp):
         ids_c, y_c = inp
-        A = jax.vmap(gen)(ids_c)                     # (ni, s, c)
+        A = jax.vmap(gen)(ids_c)                     # (ni, s, c) — ONCE
 
         def body(_, carry):
             x, z = carry
@@ -128,12 +161,22 @@ def amp_decode_blocked_scan(yb: jnp.ndarray, projector, iters: int = 20,
         if debias:
             ax = jnp.einsum("isc,ic->is", A, x)
             num = jnp.sum(ax * y_c, axis=1, keepdims=True)
-            den = jnp.maximum(jnp.sum(ax * ax, axis=1, keepdims=True), 1e-12)
-            x = x * (num / den)
+            den = jnp.sum(ax * ax, axis=1, keepdims=True)
+            x = x * _debias_factor(num, den)
         return None, x
 
     _, xs = jax.lax.scan(chunk_amp, None, (ids, ys))
-    xb = xs.reshape(-1, c)[:n_blocks]
+    return xs.reshape(-1, c)[:n_blocks]
+
+
+def amp_decode_blocked_scan(yb: jnp.ndarray, projector, iters: int = 20,
+                            threshold_mult: float = 1.3,
+                            debias: bool = True) -> jnp.ndarray:
+    """Chunked-scan AMP sized from a :class:`BlockedProjector` (the jnp
+    analogue of the fused kernel; see :func:`amp_blocked_core`)."""
+    xb = amp_blocked_core(yb, projector.seed, projector.block_size, iters,
+                          projector.chunk_blocks, threshold_mult, debias,
+                          projector.rademacher)
     return projector.from_blocks(xb)
 
 
@@ -146,6 +189,12 @@ def amp_decode(y_flat: jnp.ndarray, projector, iters: int = 20,
                                 threshold_mult)
     assert isinstance(projector, BlockedProjector)
     yb = y_flat.reshape(projector.n_blocks, projector.s_block)
-    if not projector.use_kernel and projector.n_blocks > projector.chunk_blocks:
+    if projector.use_kernel:
+        xb = amp_blocked_core(yb, projector.seed, projector.block_size,
+                              iters, projector.kernel_nb_tile,
+                              threshold_mult, rademacher=projector.rademacher,
+                              use_kernel=True)
+        return projector.from_blocks(xb)
+    if projector.n_blocks > projector.chunk_blocks:
         return amp_decode_blocked_scan(yb, projector, iters, threshold_mult)
     return amp_decode_blocked(yb, projector, iters, threshold_mult)

@@ -62,11 +62,25 @@ def mac_sum(frames: jnp.ndarray, key: jnp.ndarray, sigma2: float) -> jnp.ndarray
     return y + awgn(key, y.shape, sigma2, y.dtype)
 
 
+#: a received scale slot below this is indistinguishable from the unit-
+#: variance AWGN — the PS then skips the rescale (scale 1.0) instead of
+#: amplifying a noise reading (dividing by a tiny/negative slot would blow
+#: up / sign-flip the whole observation; the clean slot sum_m sqrt(alpha_m)
+#: is positive and far above this for any sane power budget)
+SCALE_SLOT_FLOOR = 1e-3
+
+
 def ps_normalize(y: jnp.ndarray, use_mean_removal) -> jnp.ndarray:
-    """Recover the PS observation body (eq. 18 / eq. 25)."""
+    """Recover the PS observation body (eq. 18 / eq. 25).
+
+    The clean scale slot is ``sum_m sqrt(alpha_m) > 0`` by construction;
+    noise-dominated readings (<= SCALE_SLOT_FLOOR, possible at very low
+    P-bar) fall back to scale 1.0 — bounded magnitude, never a sign flip
+    (AMP is equivariant to the *positive* scale, so alignment survives).
+    """
     body, mu_slot, scale_slot = y[:-2], y[-2], y[-1]
     use = jnp.asarray(use_mean_removal, y.dtype)
-    scale = jnp.where(jnp.abs(scale_slot) > 1e-12, scale_slot, 1.0)
+    scale = jnp.where(scale_slot > SCALE_SLOT_FLOOR, scale_slot, 1.0)
     return (body + use * mu_slot) / scale
 
 

@@ -2,7 +2,7 @@
 
 All functions are pure and jit-friendly.  Top-k selection comes in two
 flavours: exact (lax.top_k — paper-scale) and sampled-quantile threshold
-(framework-scale, one pass + pointwise mask; see DESIGN.md §4.3).
+(framework-scale, one pass + pointwise mask; see docs/DESIGN.md §4.3).
 """
 from __future__ import annotations
 

@@ -16,9 +16,12 @@ slots are scalar psums.  Per-shard measurement matrices derive from a
 shard-folded seed (the PS uses the same fold — consistency by construction).
 No d-sized tensor is ever replicated, gathered, or scanned across shards.
 
-The jnp helpers :func:`proj_forward` / :func:`amp_blocked` are the traced-
-seed blocked projection + AMP realisation (on TPU the Pallas kernels in
-kernels/ota_project.py implement the same tiling in VMEM).
+The helpers :func:`proj_forward` / :func:`amp_blocked` are the traced-seed
+blocked projection + AMP realisation: a chunked jnp scan by default, or the
+chunk-batched projection kernels (kernels/ota_project.py) and the fused
+single-launch AMP kernel (kernels/amp_fused.py) when the scheme passes
+``use_kernel=True`` — both kernels take the traced shard-folded seed
+through an SMEM operand, so PS and devices stay consistent by construction.
 """
 from __future__ import annotations
 
@@ -30,7 +33,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import OTAConfig
 from repro.core import channel
-from repro.core.amp import soft_threshold
 from repro.kernels import ref
 
 
@@ -40,9 +42,18 @@ from repro.kernels import ref
 
 
 def proj_forward(xb: jnp.ndarray, seed_u32, s_block: int,
-                 chunk_blocks: int) -> jnp.ndarray:
-    """xb (n_blocks, c) -> (n_blocks, s_block); A generated per chunk."""
+                 chunk_blocks: int, use_kernel: bool = False) -> jnp.ndarray:
+    """xb (n_blocks, c) -> (n_blocks, s_block); A generated per chunk.
+
+    ``use_kernel=True`` lowers through the chunk-batched Pallas projection
+    kernel (kernels/ota_project.py) — the traced shard-folded seed passes
+    straight through its SMEM operand.
+    """
     n_blocks, c = xb.shape
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.ota_project(xb, seed=seed_u32, s_block=s_block,
+                               rademacher=True, use_kernel=True)
     ni = min(chunk_blocks, n_blocks)
     pad = (-n_blocks) % ni
     xb_p = jnp.pad(xb, ((0, pad), (0, 0)))
@@ -62,48 +73,21 @@ def proj_forward(xb: jnp.ndarray, seed_u32, s_block: int,
 
 def amp_blocked(yb: jnp.ndarray, seed_u32, c: int, iters: int,
                 chunk_blocks: int, threshold_mult: float = 1.3,
-                debias: bool = True, id_offset=0) -> jnp.ndarray:
-    """Per-block AMP with traced seed; A generated once per chunk.
+                debias: bool = True, id_offset=0,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """Per-block AMP with traced seed; A generated ONCE per block per decode.
+
+    Thin re-export of :func:`repro.core.amp.amp_blocked_core` (the single
+    chunked implementation: jnp scan, or the fused single-launch Pallas
+    kernel when ``use_kernel=True``).
 
     id_offset (traced ok): global index of this slice's first block — lets a
     device decode a sub-range of blocks with the encoder's global block ids.
     """
-    n_blocks, s_block = yb.shape
-    ni = min(chunk_blocks, n_blocks)
-    pad = (-n_blocks) % ni
-    yb_p = jnp.pad(yb, ((0, pad), (0, 0)))
-    n_outer = (n_blocks + pad) // ni
-    ys = yb_p.reshape(n_outer, ni, s_block)
-    ids = (jnp.arange(n_outer * ni, dtype=jnp.uint32)
-           + jnp.asarray(id_offset, jnp.uint32)).reshape(n_outer, ni)
-
-    def chunk_amp(_, inp):
-        ids_c, y_c = inp
-        A = jax.vmap(lambda b: ref.block_matrix_ref(seed_u32, b, s_block,
-                                                    c, True))(ids_c)
-
-        def body(_, carry):
-            x, z = carry
-            sigma_hat = jnp.linalg.norm(z, axis=1, keepdims=True) / jnp.sqrt(
-                jnp.float32(s_block))
-            r = x + jnp.einsum("isc,is->ic", A, z)
-            x_new = soft_threshold(r, threshold_mult * sigma_hat)
-            onsager = z * (jnp.sum(x_new != 0.0, axis=1, keepdims=True)
-                           / s_block)
-            z_new = y_c - jnp.einsum("isc,ic->is", A, x_new) + onsager
-            return x_new, z_new
-
-        x0 = jnp.zeros((ni, c), y_c.dtype)
-        x, _ = jax.lax.fori_loop(0, iters, body, (x0, y_c))
-        if debias:
-            ax = jnp.einsum("isc,ic->is", A, x)
-            num = jnp.sum(ax * y_c, axis=1, keepdims=True)
-            den = jnp.maximum(jnp.sum(ax * ax, axis=1, keepdims=True), 1e-12)
-            x = x * (num / den)
-        return None, x
-
-    _, xs = jax.lax.scan(chunk_amp, None, (ids, ys))
-    return xs.reshape(-1, c)[:n_blocks]
+    from repro.core.amp import amp_blocked_core
+    return amp_blocked_core(yb, seed_u32, c, iters, chunk_blocks,
+                            threshold_mult, debias, rademacher=True,
+                            id_offset=id_offset, use_kernel=use_kernel)
 
 
 def psum_all(x, axes: Sequence[str]):
@@ -219,5 +203,6 @@ def sharded_ota_round(g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
                 if pre_average_groups is not None else None),
         d_pad=d_pad, p_scale=p_scale, key_salt=key_salt,
         sample_per_shard=sample_per_shard, chunk_blocks=chunk_blocks,
-        frame_dtype=frame_dtype, shard_decode=shard_decode)
+        frame_dtype=frame_dtype, shard_decode=shard_decode,
+        use_kernel=cfg.use_kernel)
     return sharded_round(scheme, g_slice, delta_slice, step, key, ctx)

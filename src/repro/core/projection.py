@@ -9,7 +9,7 @@ Two realisations:
   is split into ``n_blocks`` chunks of ``block_size``; each chunk has an
   independent (s_block x block_size) matrix generated on-the-fly from a
   counter hash (kernels/).  Memory O(tile), shardable along d, AMP
-  factorises per block.  See DESIGN.md §4.
+  factorises per block.  See docs/DESIGN.md §4.
 """
 from __future__ import annotations
 
@@ -78,6 +78,14 @@ class BlockedProjector:
         return _chunk_blocks_for(self.s_block, self.block_size)
 
     @property
+    def kernel_nb_tile(self) -> int:
+        """Blocks batched per Pallas program (VMEM-budget analogue of the
+        HBM-budget ``chunk_blocks``); the kernel wrappers clamp further."""
+        from repro.kernels.ota_project import VMEM_TILE_BYTES
+        return _chunk_blocks_for(self.s_block, self.block_size,
+                                 budget_bytes=VMEM_TILE_BYTES)
+
+    @property
     def d_pad(self) -> int:
         return self.n_blocks * self.block_size
 
@@ -120,7 +128,7 @@ class BlockedProjector:
         """Chunked scan: generate each A chunk on the fly and consume it.
 
         The jnp analogue of the Pallas kernel's VMEM tiling — bounds the
-        A working set to ``chunk_blocks`` blocks (DESIGN.md §4.1).
+        A working set to ``chunk_blocks`` blocks (docs/DESIGN.md §4.1).
         """
         n_blocks = xb.shape[0]
         ni = self.chunk_blocks

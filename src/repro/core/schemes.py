@@ -89,6 +89,7 @@ class MACContext:
     chunk_blocks: int = 8                        # A-matrix working set
     frame_dtype: Any = None                      # psum analog bodies in bf16
     shard_decode: bool = False                   # split PS AMP across devices
+    use_kernel: bool = False                     # Pallas projection/AMP path
 
     @property
     def group_size(self) -> int:
@@ -318,6 +319,10 @@ class ADSGDScheme(Scheme):
         return ref.splitmix32(jnp.uint32(self.cfg.seed)
                               ^ shard_idx.astype(jnp.uint32)), shard_idx
 
+    def _use_kernel(self, ctx: MACContext) -> bool:
+        """Pallas knob: OTAConfig.use_kernel, or the MACContext override."""
+        return bool(self.cfg.use_kernel) or ctx.use_kernel
+
     def encode_slice(self, g_slice, state_slice, step, key, ctx):
         from repro.core.distributed import proj_forward, psum_all
         cfg = self.cfg
@@ -346,7 +351,8 @@ class ADSGDScheme(Scheme):
         n_blocks_local = d_local // c
         seed_u32, _ = self._slice_seed(ctx)
         yb = proj_forward(g_sp.reshape(n_blocks_local, c), seed_u32, s_block,
-                          ctx.chunk_blocks)              # (nb_local, s_block)
+                          ctx.chunk_blocks,
+                          use_kernel=self._use_kernel(ctx))  # (nb_local, s_b)
 
         # --- power scaling (paper eq. 13/22; scalars psum'd over shards) ---
         # ctx.p_factor carries this device's fading received-power factor
@@ -370,9 +376,14 @@ class ADSGDScheme(Scheme):
         body, slots = y["body"], y["slots"]
         use_mr = (jnp.asarray(step)
                   < cfg.mean_removal_steps).astype(jnp.float32)
-        scale = jnp.where(jnp.abs(slots[1]) > 1e-12, slots[1], 1.0)
+        # the clean scale slot is sum_m sqrt(alpha_m) > 0 by construction;
+        # a noise-dominated reading falls back to 1.0 so it can neither
+        # flip the observation's sign nor amplify it unboundedly (same rule
+        # as channel.ps_normalize on the dense path)
+        scale = jnp.where(slots[1] > channel.SCALE_SLOT_FLOOR, slots[1], 1.0)
         y_norm = (body + use_mr * slots[0]) / scale
         seed_u32, _ = self._slice_seed(ctx)
+        use_kernel = self._use_kernel(ctx)
         c = cfg.block_size
         if ctx.shard_decode and ctx.device_axes:
             # the y slice is identical on every device row after the psum —
@@ -392,11 +403,13 @@ class ADSGDScheme(Scheme):
             y_mine = jax.lax.dynamic_slice_in_dim(y_p, row_idx * per, per, 0)
             x_mine = amp_blocked(y_mine, seed_u32, c, cfg.amp_iters,
                                  ctx.chunk_blocks,
-                                 id_offset=(row_idx * per).astype(jnp.uint32))
+                                 id_offset=(row_idx * per).astype(jnp.uint32),
+                                 use_kernel=use_kernel)
             xg = jax.lax.all_gather(x_mine, ctx.device_axes, tiled=True)
             return xg[:nb].reshape(-1)
         return amp_blocked(y_norm, seed_u32, c, cfg.amp_iters,
-                           ctx.chunk_blocks).reshape(-1)
+                           ctx.chunk_blocks,
+                           use_kernel=use_kernel).reshape(-1)
 
 
 # ---------------------------------------------------------------------------

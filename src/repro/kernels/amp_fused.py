@@ -1,0 +1,106 @@
+"""Fused single-launch AMP decode kernel (paper §IV, Lemma 1).
+
+The PS-side AMP reconstruction is the per-round hot path of A-DSGD: every
+iteration needs one forward and one adjoint pass through the block-diagonal
+measurement matrix ``A``, which at framework scale is regenerated from a
+counter hash on every use.  Launch-per-op decoding therefore pays
+``2 * amp_iters + 1`` A-generations per block (adjoint + forward per
+iteration, plus the LS debias).
+
+This kernel is the in-kernel realisation of the chunked-scan structure of
+``repro.core.amp.amp_blocked_core``: the grid runs over chunks of
+``nb_tile`` blocks, each program generates its chunk's A tile **once** into
+VMEM, keeps the AMP carries ``(x, z)`` resident, and runs all ``iters``
+soft-threshold/Onsager iterations plus the clamped LS debias inside one
+``pallas_call``.  A-generation cost per decode drops to exactly one pass
+per block and HBM traffic to O(y + x).
+
+Seed and block-id offset arrive through SMEM as *traced* uint32 scalars so
+the shard-folded seeds of the fully-sharded slice driver
+(core/distributed.py) use the same kernel.  Validated in interpret mode
+against the jnp oracle (tests/test_amp_fused.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# pointwise AMP math is shared with the jnp paths (pure-jnp helpers lower
+# fine inside a kernel body; core.amp has no module-level kernels import,
+# so this does not cycle) — the clamp/epsilon constants live in ONE place
+from repro.core.amp import _debias_factor, soft_threshold
+from repro.kernels.ota_project import (VMEM_TILE_BYTES, _bdot, _pad_blocks,
+                                       _tile_A)
+
+
+def _amp_kernel(scal_ref, y_ref, x_ref, *, nb_tile, s_block, c, iters,
+                threshold_mult, debias, rademacher):
+    t = pl.program_id(0)
+    seed = scal_ref[0]
+    b0 = scal_ref[1] + jnp.uint32(t * nb_tile)
+    # ONE A-generation per block, resident in VMEM for the whole decode
+    A = _tile_A(seed, b0, jnp.uint32(0), jnp.uint32(0),
+                nb_tile, s_block, c, s_block, rademacher)
+    y = y_ref[...]                                   # (nb_tile, s_block)
+    inv_sqrt_s = jnp.float32(1.0 / (s_block ** 0.5))
+
+    def body(_, carry):
+        x, z = carry
+        sigma_hat = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True)) \
+            * inv_sqrt_s
+        r = x + _bdot(A, z, 1, 1)                    # adjoint (MXU)
+        x_new = soft_threshold(r, threshold_mult * sigma_hat)
+        onsager = z * (jnp.sum(x_new != 0.0, axis=1, keepdims=True)
+                       / s_block)
+        z_new = y - _bdot(A, x_new, 2, 1) + onsager  # forward (MXU)
+        return x_new, z_new
+
+    x0 = jnp.zeros((nb_tile, c), jnp.float32)
+    x, z = jax.lax.fori_loop(0, iters, body, (x0, y))
+    if debias:
+        ax = _bdot(A, x, 2, 1)
+        num = jnp.sum(ax * y, axis=1, keepdims=True)
+        den = jnp.sum(ax * ax, axis=1, keepdims=True)
+        x = x * _debias_factor(num, den)
+    x_ref[...] = x
+
+
+def amp_decode_fused_pallas(yb: jnp.ndarray, seed, c: int, *,
+                            iters: int = 20, threshold_mult: float = 1.3,
+                            debias: bool = True, rademacher: bool = True,
+                            nb_tile: int | None = None, id_offset=0,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Decode yb: (n_blocks, s_block) -> xb: (n_blocks, c) in one launch.
+
+    ``seed`` and ``id_offset`` (global index of the first block, for
+    decoding a sub-range with the encoder's global block ids) may be traced
+    uint32 scalars.
+    """
+    n_blocks, s_block = yb.shape
+    # clamp any requested nb_tile to the VMEM budget: callers hand down
+    # HBM-sized knobs (MACContext.chunk_blocks), and an A tile past
+    # VMEM_TILE_BYTES fails Mosaic compilation on the real-TPU path that
+    # interpret-mode CI never exercises
+    vmem_cap = max(1, (VMEM_TILE_BYTES // 4) // max(s_block * c, 1))
+    nb_tile = vmem_cap if nb_tile is None else min(nb_tile, vmem_cap)
+    nb_tile = min(nb_tile, n_blocks)
+    y_p = _pad_blocks(yb.astype(jnp.float32), nb_tile)
+    scal = jnp.stack([jnp.asarray(seed, jnp.uint32),
+                      jnp.asarray(id_offset, jnp.uint32)])
+    kern = functools.partial(_amp_kernel, nb_tile=nb_tile, s_block=s_block,
+                             c=c, iters=iters, threshold_mult=threshold_mult,
+                             debias=debias, rademacher=rademacher)
+    xb = pl.pallas_call(
+        kern,
+        grid=(y_p.shape[0] // nb_tile,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((nb_tile, s_block), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((nb_tile, c), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((y_p.shape[0], c), jnp.float32),
+        interpret=interpret,
+    )(scal, y_p)
+    return xb[:n_blocks]

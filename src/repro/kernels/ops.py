@@ -1,9 +1,15 @@
 """jit'd public wrappers around the Pallas kernels with jnp fallbacks.
 
-``use_kernel=True`` routes through pl.pallas_call (interpret mode on CPU,
+``use_kernel=True`` routes through pl.pallas_call (interpret mode off-TPU,
 compiled Mosaic on TPU); ``use_kernel=False`` uses the pure-jnp oracle path,
 which XLA fuses reasonably and which is what the multi-pod dry-run lowers
 (Mosaic kernels do not lower on the CPU backend used for dry-runs).
+
+``seed`` is a regular (traceable) operand on every wrapper: python ints,
+concrete arrays and traced uint32 scalars (the shard-folded seeds of the
+fully-sharded slice driver) all work.  Backend detection is lazy —
+:func:`interpret_default` is evaluated at trace time of each call, never at
+import time, so selecting a backend after importing this module works.
 """
 from __future__ import annotations
 
@@ -13,32 +19,61 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.amp_fused import amp_decode_fused_pallas
 from repro.kernels.ef_sparsify import ef_sparsify_pallas
 from repro.kernels.ota_project import ota_project_pallas, ota_project_t_pallas
 
-_INTERPRET = jax.default_backend() != "tpu"
+
+def interpret_default() -> bool:
+    """Run Pallas in interpret mode?  Evaluated lazily per call (at trace
+    time) — an import-time constant would pin the backend before the user
+    could select one (e.g. via jax.config / JAX_PLATFORMS)."""
+    return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("seed", "s_block", "rademacher",
-                                             "use_kernel"))
-def ota_project(x: jnp.ndarray, *, seed: int, s_block: int,
-                rademacher: bool = True, use_kernel: bool = False):
+@functools.partial(jax.jit, static_argnames=("s_block", "rademacher",
+                                             "use_kernel", "nb_tile"))
+def ota_project(x: jnp.ndarray, *, seed, s_block: int,
+                rademacher: bool = True, use_kernel: bool = False,
+                nb_tile: int | None = None):
     """Blocked forward projection. x: (n_blocks, c) -> (n_blocks, s_block)."""
     if use_kernel:
         return ota_project_pallas(x, seed, s_block, rademacher,
-                                  interpret=_INTERPRET)
+                                  nb_tile=nb_tile,
+                                  interpret=interpret_default())
     return ref.ota_project_ref(x, seed, s_block, rademacher)
 
 
-@functools.partial(jax.jit, static_argnames=("seed", "c", "rademacher",
-                                             "use_kernel"))
-def ota_project_t(y: jnp.ndarray, *, seed: int, c: int,
-                  rademacher: bool = True, use_kernel: bool = False):
+@functools.partial(jax.jit, static_argnames=("c", "rademacher",
+                                             "use_kernel", "nb_tile"))
+def ota_project_t(y: jnp.ndarray, *, seed, c: int,
+                  rademacher: bool = True, use_kernel: bool = False,
+                  nb_tile: int | None = None):
     """Blocked transpose projection. y: (n_blocks, s_block) -> (n_blocks, c)."""
     if use_kernel:
         return ota_project_t_pallas(y, seed, c, rademacher,
-                                    interpret=_INTERPRET)
+                                    nb_tile=nb_tile,
+                                    interpret=interpret_default())
     return ref.ota_project_t_ref(y, seed, c, rademacher)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "iters", "threshold_mult",
+                                             "debias", "rademacher",
+                                             "nb_tile"))
+def amp_decode_fused(yb: jnp.ndarray, *, seed, c: int, iters: int,
+                     threshold_mult: float = 1.3, debias: bool = True,
+                     rademacher: bool = True, nb_tile: int | None = None,
+                     id_offset=0):
+    """Single-launch fused AMP decode (kernels/amp_fused.py).
+
+    The jnp realisation of the same one-generation-per-block structure is
+    :func:`repro.core.amp.amp_blocked_core` (use_kernel=False).
+    """
+    return amp_decode_fused_pallas(yb, seed, c, iters=iters,
+                                   threshold_mult=threshold_mult,
+                                   debias=debias, rademacher=rademacher,
+                                   nb_tile=nb_tile, id_offset=id_offset,
+                                   interpret=interpret_default())
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
@@ -47,5 +82,5 @@ def ef_sparsify(g: jnp.ndarray, delta: jnp.ndarray, tau, *,
     """Fused error-feedback + threshold sparsify. Returns (g_sp, new_delta)."""
     if use_kernel:
         return ef_sparsify_pallas(g, delta, jnp.asarray(tau),
-                                  interpret=_INTERPRET)
+                                  interpret=interpret_default())
     return ref.ef_sparsify_ref(g, delta, jnp.asarray(tau))

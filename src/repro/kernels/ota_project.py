@@ -6,11 +6,14 @@ pseudo-random matrix ``A``.  At framework scale A cannot live in HBM
 VMEM tile of A from a counter-based hash (see kernels/ref.py) *inside* the
 matmul kernel: HBM traffic is O(d + s) and A never exists.
 
-TPU adaptation notes (DESIGN.md §4): MXU-aligned tiles (multiples of 128 on
-the contracting/lane dims), VPU generates the next A tile's entries from
-integer hashes while the MXU consumes the previous one (software pipelining
-by the Mosaic compiler), Rademacher entries (one hash + sign) instead of
-Box-Muller Gaussians.
+TPU adaptation notes (docs/DESIGN.md §4): each grid program batches
+``nb_tile`` blocks and contracts them with one batched ``dot_general``
+(MXU) instead of a per-block matvec; the VPU generates the next A tile's
+entries from integer hashes while the MXU consumes the previous one
+(software pipelining by the Mosaic compiler); Rademacher entries (one hash
++ sign) instead of Box-Muller Gaussians.  The seed arrives through SMEM as
+a *traced* uint32 scalar, so the shard-folded seeds of the fully-sharded
+slice driver (core/distributed.py) lower through the same kernels.
 
 Kernels are validated in interpret mode against kernels/ref.py.
 """
@@ -21,8 +24,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import _GOLDEN, _M1, _M2
+
+#: VMEM budget for one program's A tile (bytes); actual VMEM is ~16 MiB/core,
+#: leave room for x/y blocks, the double-buffered next tile and AMP carries.
+VMEM_TILE_BYTES = 4 << 20
+
 
 # ---------------------------------------------------------------------------
 # in-kernel hash (identical math to ref.splitmix32 / ref.hash3)
@@ -39,12 +48,17 @@ def _splitmix32(x):
     return x
 
 
-def _tile_A(seed: int, block, row0, col0, s_tile: int, c_tile: int,
+def _tile_A(seed, block0, row0, col0, nb_tile: int, r_tile: int, c_tile: int,
             s_block: int, rademacher: bool):
-    """Generate the (s_tile, c_tile) tile of A_block starting at (row0, col0)."""
-    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (s_tile, c_tile), 0)
-    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (s_tile, c_tile), 1)
-    h = _splitmix32(jnp.uint32(seed) ^ block.astype(jnp.uint32))
+    """Generate the (nb_tile, r_tile, c_tile) stacked-A tile whose first
+    block is ``block0``, starting at entry (row0, col0) of each block.
+
+    ``seed``/``block0`` may be traced uint32 scalars (SMEM-prefetched)."""
+    shape = (nb_tile, r_tile, c_tile)
+    blocks = block0 + jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, shape, 2)
+    h = _splitmix32(jnp.uint32(seed) ^ blocks)
     h = _splitmix32(h ^ rows)
     h = _splitmix32(h ^ cols)
     scale = jnp.float32(1.0 / (s_block ** 0.5))
@@ -58,42 +72,86 @@ def _tile_A(seed: int, block, row0, col0, s_tile: int, c_tile: int,
     return z * scale
 
 
+def _bdot(a, b, contract_a: int, contract_b: int):
+    """Batched (leading-dim) contraction on the MXU in f32."""
+    return jax.lax.dot_general(
+        a, b, (((contract_a,), (contract_b,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _divisor_tile(n: int, budget_elems: int) -> int:
+    """Largest divisor of n with at most budget_elems elements."""
+    t = max(1, min(n, budget_elems))
+    while n % t:
+        t -= 1
+    return t
+
+
+def _pick_tiles(n_blocks: int, inner: int, other: int,
+                nb_tile: int | None, inner_tile: int | None):
+    """(nb_tile, inner_tile) fitting one A tile in VMEM_TILE_BYTES.
+
+    ``inner`` is the tiled A dimension (rows for forward, cols for adjoint),
+    ``other`` the un-tiled one.  nb_tile batches blocks per program."""
+    budget = VMEM_TILE_BYTES // 4
+    if inner_tile is None:
+        inner_tile = _divisor_tile(inner, max(1, budget // max(other, 1)))
+    assert inner % inner_tile == 0
+    # a requested nb_tile is clamped to the VMEM budget too — callers hand
+    # down HBM-sized knobs, and an oversized A tile fails Mosaic on TPU
+    cap = max(1, budget // max(inner_tile * other, 1))
+    nb_tile = cap if nb_tile is None else max(1, min(nb_tile, cap))
+    return min(nb_tile, n_blocks), inner_tile
+
+
+def _pad_blocks(x: jnp.ndarray, nb_tile: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % nb_tile
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+def _seed_arr(seed) -> jnp.ndarray:
+    """[seed] as a uint32 SMEM operand; accepts python ints and traced
+    scalars (e.g. the shard-folded seeds of the slice driver)."""
+    return jnp.asarray(seed, jnp.uint32).reshape(1)
+
+
 # ---------------------------------------------------------------------------
-# forward projection: y[b] = A_b @ x[b]
+# forward projection: y[b] = A_b @ x[b],  nb_tile blocks per program
 # ---------------------------------------------------------------------------
 
 
-def _fwd_kernel(x_ref, y_ref, *, seed, s_tile, s_block, c, rademacher):
-    b = pl.program_id(0)
-    i = pl.program_id(1)
-    A = _tile_A(seed, b, (i * s_tile).astype(jnp.uint32), jnp.uint32(0),
-                s_tile, c, s_block, rademacher)
-    x = x_ref[0, :]                     # (c,)
-    y_ref[0, :] = A @ x                  # (s_tile,)
+def _fwd_kernel(seed_ref, x_ref, y_ref, *, nb_tile, s_tile, s_block, c,
+                rademacher):
+    g = pl.program_id(0)                 # block-chunk index
+    i = pl.program_id(1)                 # row-tile index inside s_block
+    b0 = jnp.uint32(g * nb_tile)
+    A = _tile_A(seed_ref[0], b0, jnp.uint32(i * s_tile), jnp.uint32(0),
+                nb_tile, s_tile, c, s_block, rademacher)
+    x = x_ref[...]                       # (nb_tile, c)
+    y_ref[...] = _bdot(A, x, 2, 1)       # (nb_tile, s_tile)
 
 
-def ota_project_pallas(x: jnp.ndarray, seed: int, s_block: int,
-                       rademacher: bool = True, s_tile: int | None = None,
+def ota_project_pallas(x: jnp.ndarray, seed, s_block: int,
+                       rademacher: bool = True, nb_tile: int | None = None,
+                       s_tile: int | None = None,
                        interpret: bool = True) -> jnp.ndarray:
     """x: (n_blocks, c) float32 -> y: (n_blocks, s_block) float32."""
     n_blocks, c = x.shape
-    if s_tile is None:
-        # keep the A tile under ~4 MiB of VMEM, MXU-aligned when possible
-        s_tile = max(1, min(s_block, (4 * 1024 * 1024 // 4) // max(c, 1)))
-        while s_block % s_tile:
-            s_tile -= 1
-    assert s_block % s_tile == 0
-    grid = (n_blocks, s_block // s_tile)
-    kern = functools.partial(_fwd_kernel, seed=seed, s_tile=s_tile,
+    nb_tile, s_tile = _pick_tiles(n_blocks, s_block, c, nb_tile, s_tile)
+    x_p = _pad_blocks(x.astype(jnp.float32), nb_tile)
+    grid = (x_p.shape[0] // nb_tile, s_block // s_tile)
+    kern = functools.partial(_fwd_kernel, nb_tile=nb_tile, s_tile=s_tile,
                              s_block=s_block, c=c, rademacher=rademacher)
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, c), lambda b, i: (b, 0))],
-        out_specs=pl.BlockSpec((1, s_tile), lambda b, i: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, s_block), jnp.float32),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((nb_tile, c), lambda g, i: (g, 0))],
+        out_specs=pl.BlockSpec((nb_tile, s_tile), lambda g, i: (g, i)),
+        out_shape=jax.ShapeDtypeStruct((x_p.shape[0], s_block), jnp.float32),
         interpret=interpret,
-    )(x.astype(jnp.float32))
+    )(_seed_arr(seed), x_p)
+    return y[:n_blocks]
 
 
 # ---------------------------------------------------------------------------
@@ -101,33 +159,35 @@ def ota_project_pallas(x: jnp.ndarray, seed: int, s_block: int,
 # ---------------------------------------------------------------------------
 
 
-def _t_kernel(y_ref, o_ref, *, seed, c_tile, s_block, rademacher):
-    b = pl.program_id(0)
-    j = pl.program_id(1)
-    A = _tile_A(seed, b, jnp.uint32(0), (j * c_tile).astype(jnp.uint32),
-                s_block, c_tile, s_block, rademacher)   # (s_block, c_tile)
-    y = y_ref[0, :]                      # (s_block,)
-    o_ref[0, :] = y @ A                  # (c_tile,)
+def _t_kernel(seed_ref, y_ref, o_ref, *, nb_tile, c_tile, s_block,
+              rademacher):
+    g = pl.program_id(0)
+    j = pl.program_id(1)                 # col-tile index inside c
+    b0 = jnp.uint32(g * nb_tile)
+    A = _tile_A(seed_ref[0], b0, jnp.uint32(0), jnp.uint32(j * c_tile),
+                nb_tile, s_block, c_tile, s_block, rademacher)
+    y = y_ref[...]                       # (nb_tile, s_block)
+    o_ref[...] = _bdot(A, y, 1, 1)       # (nb_tile, c_tile)
 
 
-def ota_project_t_pallas(y: jnp.ndarray, seed: int, c: int,
-                         rademacher: bool = True, c_tile: int | None = None,
+def ota_project_t_pallas(y: jnp.ndarray, seed, c: int,
+                         rademacher: bool = True, nb_tile: int | None = None,
+                         c_tile: int | None = None,
                          interpret: bool = True) -> jnp.ndarray:
     """y: (n_blocks, s_block) float32 -> (n_blocks, c) float32."""
     n_blocks, s_block = y.shape
-    if c_tile is None:
-        c_tile = max(1, min(c, (4 * 1024 * 1024 // 4) // max(s_block, 1)))
-        while c % c_tile:
-            c_tile -= 1
-    assert c % c_tile == 0
-    grid = (n_blocks, c // c_tile)
-    kern = functools.partial(_t_kernel, seed=seed, c_tile=c_tile,
+    nb_tile, c_tile = _pick_tiles(n_blocks, c, s_block, nb_tile, c_tile)
+    y_p = _pad_blocks(y.astype(jnp.float32), nb_tile)
+    grid = (y_p.shape[0] // nb_tile, c // c_tile)
+    kern = functools.partial(_t_kernel, nb_tile=nb_tile, c_tile=c_tile,
                              s_block=s_block, rademacher=rademacher)
-    return pl.pallas_call(
+    o = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, s_block), lambda b, j: (b, 0))],
-        out_specs=pl.BlockSpec((1, c_tile), lambda b, j: (b, j)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, c), jnp.float32),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((nb_tile, s_block), lambda g, j: (g, 0))],
+        out_specs=pl.BlockSpec((nb_tile, c_tile), lambda g, j: (g, j)),
+        out_shape=jax.ShapeDtypeStruct((y_p.shape[0], c), jnp.float32),
         interpret=interpret,
-    )(y.astype(jnp.float32))
+    )(_seed_arr(seed), y_p)
+    return o[:n_blocks]

@@ -13,6 +13,7 @@ Entry distributions:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -64,7 +65,7 @@ def block_matrix_ref(seed: int, block: jnp.ndarray, s_block: int, c: int,
     return z * scale
 
 
-def ota_project_ref(x: jnp.ndarray, seed: int, s_block: int,
+def ota_project_ref(x: jnp.ndarray, seed, s_block: int,
                     rademacher: bool = True) -> jnp.ndarray:
     """Oracle forward projection. x: (n_blocks, c) -> y: (n_blocks, s_block)."""
     n_blocks, c = x.shape
@@ -73,17 +74,10 @@ def ota_project_ref(x: jnp.ndarray, seed: int, s_block: int,
         A = block_matrix_ref(seed, b, s_block, c, rademacher)
         return A @ xb
 
-    blocks = jnp.arange(n_blocks, dtype=jnp.uint32)
-    return jnp.stack([one(blocks[i], x[i]) for i in range(n_blocks)]) \
-        if n_blocks <= 8 else _vmapped(one, blocks, x)
+    return jax.vmap(one)(jnp.arange(n_blocks, dtype=jnp.uint32), x)
 
 
-def _vmapped(fn, blocks, x):
-    import jax
-    return jax.vmap(fn)(blocks, x)
-
-
-def ota_project_t_ref(y: jnp.ndarray, seed: int, c: int,
+def ota_project_t_ref(y: jnp.ndarray, seed, c: int,
                       rademacher: bool = True) -> jnp.ndarray:
     """Oracle transpose projection. y: (n_blocks, s_block) -> (n_blocks, c)."""
     n_blocks, s_block = y.shape
@@ -92,7 +86,6 @@ def ota_project_t_ref(y: jnp.ndarray, seed: int, c: int,
         A = block_matrix_ref(seed, b, s_block, c, rademacher)
         return A.T @ yb
 
-    import jax
     return jax.vmap(one)(jnp.arange(n_blocks, dtype=jnp.uint32), y)
 
 

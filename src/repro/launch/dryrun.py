@@ -36,7 +36,7 @@ from repro.train import trainer as trainer_lib  # noqa: E402
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
-# shapes whose decode needs a sliding window (sub-quadratic rule, DESIGN.md §5)
+# shapes whose decode needs a sliding window (sub-quadratic rule, docs/DESIGN.md §5)
 LONG_WINDOW = 8192
 SKIPS = {
     # (arch, shape): reason — recorded, not silently dropped

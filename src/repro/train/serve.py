@@ -1,7 +1,7 @@
 """Serving: prefill + one-token decode steps under auto (GSPMD) sharding.
 
 OTA-DSGD is a training-time technique; serving has no gradient aggregation
-(DESIGN.md §5), so serve steps are plain jit with declarative shardings:
+(docs/DESIGN.md §5), so serve steps are plain jit with declarative shardings:
 params over 'model', batch over the data axes, KV caches over
 (batch -> data, heads-or-seq -> model).
 """
