@@ -1,0 +1,136 @@
+"""Sweep-engine benchmark: looped per-round dispatch vs one compiled grid.
+
+Runs the same A-DSGD P-bar grid three ways and writes ``BENCH_sweeps.json``
+at the repo root (committed; each PR can diff against it, and CI uploads it
+as an artifact):
+
+* ``looped``          — the legacy path (``run_federated``): one jitted
+                        round per Python-loop iteration, host evals between
+                        rounds, one compile + T dispatches per grid point.
+* ``compiled_cold``   — ``run_sweep``: the whole grid as one vmapped+jitted
+                        scan-over-rounds, including trace + compile time
+                        (what a single figure run pays).
+* ``compiled_steady`` — the same XLA program re-invoked warm: one dispatch
+                        for the entire grid (the dispatch-overhead floor).
+
+``SMOKE=1`` (CI) shrinks to 2 grid points x 3 rounds; the default CPU size
+keeps the figure-scale model (d = 7850) at a reduced grid; ``FULL=1`` runs
+a figure-sized grid.  On CPU at figure scale the rounds are
+compute-dominated (dense AMP decode), so the steady advantage is modest;
+the engine's structural win — grid x rounds dispatches collapsed to one —
+is the same number that dominates on accelerators.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_sweeps.py
+    PYTHONPATH=src python benchmarks/run.py sweeps
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, Optional
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+# allow `python benchmarks/bench_sweeps.py` from the repo root (script mode
+# puts benchmarks/ itself on sys.path, not the package's parent)
+sys.path.insert(0, REPO_ROOT)
+
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_sweeps.json")
+
+SMOKE = bool(int(os.environ.get("SMOKE", "0")))
+FULL = bool(int(os.environ.get("FULL", "0")))
+
+
+def grid_spec():
+    if SMOKE:
+        return [200.0, 1000.0], 3
+    if FULL:
+        return [50.0, 200.0, 500.0, 1000.0], 50
+    return [50.0, 200.0, 500.0, 1000.0], 10
+
+
+def main(collect: Optional[list] = None, out_path: str = OUT_PATH) -> Dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import SCALE, dataset, ota, run_series
+    from repro.core import power
+    from repro.experiments import (
+        CompiledExperiment, Experiment, round_keys, run_sweep,
+    )
+
+    p_grid, steps = grid_spec()
+    dev, test = dataset(iid=True)
+    (xd, yd), (xte, yte) = dev, test
+    base = ota("a_dsgd", total_steps=steps)
+    n_points = len(p_grid)
+
+    # --- looped reference: the legacy per-round harness, per grid point ----
+    t0 = time.time()
+    looped_final = []
+    for p in p_grid:
+        cfg = dataclasses.replace(base, p_avg=p)
+        r = run_series("bench_sweeps", f"a_dsgd_P{int(p)}", dev, test, cfg,
+                       steps=steps)
+        looped_final.append(r["final_acc"])
+    looped_s = time.time() - t0
+
+    # --- compiled engine, cold: trace + compile + run ----------------------
+    t0 = time.time()
+    res = run_sweep(dev, test, base, {"p_avg": p_grid}, steps=steps,
+                    lr=SCALE.lr, eval_every=SCALE.eval_every)
+    compiled_cold_s = time.time() - t0
+
+    # --- compiled engine, steady: the warm program, one dispatch -----------
+    exp = Experiment(cfg=base, steps=steps, lr=SCALE.lr,
+                     eval_every=SCALE.eval_every)
+    ce = CompiledExperiment(xd, yd, xte, yte, exp)
+    p_rows = jnp.asarray(np.stack([
+        power.schedule_array(steps, p, base.power_schedule)
+        for p in p_grid]).astype(np.float32))
+    keys = jnp.stack([round_keys(steps) for _ in p_grid])
+    fn = jax.jit(jax.vmap(ce.run, in_axes=({"p_sched": 0}, 0)))
+    jax.block_until_ready(fn({"p_sched": p_rows}, keys))      # warm it
+    t0 = time.time()
+    out = fn({"p_sched": p_rows}, keys)
+    jax.block_until_ready(out)
+    compiled_steady_s = time.time() - t0
+
+    # sanity: engine == loop, point for point (bitwise per the parity tests)
+    compiled_final = [r["final_acc"] for r in res.records]
+    max_dev = max(abs(a - b) for a, b in zip(looped_final, compiled_final))
+
+    results = {
+        "backend": jax.default_backend(),
+        "smoke": SMOKE,
+        "grid_points": n_points,
+        "rounds": steps,
+        "looped_s": round(looped_s, 3),
+        "compiled_cold_s": round(compiled_cold_s, 3),
+        "compiled_steady_s": round(compiled_steady_s, 3),
+        "speedup_cold": round(looped_s / max(compiled_cold_s, 1e-9), 2),
+        "speedup_steady": round(looped_s / max(compiled_steady_s, 1e-9), 2),
+        "max_final_acc_deviation": float(max_dev),
+    }
+    for name in ("looped", "compiled_cold", "compiled_steady"):
+        us = results[f"{name}_s"] / (n_points * steps) * 1e6
+        results[f"{name}_us_per_round"] = round(us, 1)
+        print(f"  {name:16s} {results[name + '_s']:8.2f} s total"
+              f"  {us:10.1f} us/round", flush=True)
+        if collect is not None:
+            collect.append((f"sweeps/{name}", us,
+                            results["speedup_steady"]))
+    print(f"  max |looped - compiled| final acc: {max_dev:.2e}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

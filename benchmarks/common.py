@@ -5,6 +5,13 @@ Every figure benchmark prints CSV rows:
 plus a summary row  ``name,us_per_call,derived``  (derived = final accuracy)
 for benchmarks/run.py.
 
+The figures run on the compiled sweep engine (:mod:`repro.experiments`,
+docs/DESIGN.md §6): each grid is grouped into vmapped+jitted
+scans-over-rounds via :func:`sweep_series` instead of a Python per-round
+loop per grid point.  :func:`run_series` keeps the looped reference path
+(``run_federated``) for timing comparisons (benchmarks/bench_sweeps.py) —
+both produce identical rows (pinned by tests/test_experiments.py).
+
 Scale: the default is a CPU-sized rendition (the paper's exact d = 7850
 single-layer model, fewer devices/steps); ``FULL=1`` env restores the paper's
 M=25, B=1000, T=300 settings.  MNIST is replaced by the deterministic
@@ -15,7 +22,7 @@ from __future__ import annotations
 import os
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,13 +51,21 @@ SCALE = Scale()
 
 
 def dataset(iid: bool = True, m: Optional[int] = None,
-            b: Optional[int] = None, seed: int = 3):
+            b: Optional[int] = None, seed: int = 3,
+            partition: str = "", beta: float = 1.0):
+    """Surrogate dataset split over M devices.
+
+    ``partition`` selects any :mod:`repro.data.partition` kind
+    (``iid`` | ``label_shards`` | ``dirichlet`` with bias knob ``beta``);
+    empty keeps the paper's two protocols via ``iid``.
+    """
     m = m or SCALE.m
     b = b or SCALE.b
     (xtr, ytr), (xte, yte) = make_classification(
         n_train=SCALE.n_train, n_test=SCALE.n_test, noise=SCALE.noise,
         seed=seed)
-    xd, yd = federated_split(xtr, ytr, m=m, b=b, iid=iid, seed=0)
+    xd, yd = federated_split(xtr, ytr, m=m, b=b, iid=iid, seed=0,
+                             kind=partition, beta=beta)
     return (xd, yd), (xte, yte)
 
 
@@ -85,6 +100,40 @@ def run_series(fig: str, series: str, dev_data, test_data, cfg: OTAConfig,
         out_rows.append(f"{fig},{series},{step},{acc:.4f}")
     return {"final_acc": run.accs[-1], "us_per_call": dt / steps * 1e6,
             "rows": out_rows, "run": run}
+
+
+def sweep_series(fig: str, dev_data, test_data, axes: Dict[str, Sequence],
+                 series_fn: Callable[[Dict], str],
+                 rows: Optional[List[str]] = None,
+                 steps: Optional[int] = None, lr: Optional[float] = None,
+                 **ota_kw) -> Tuple[object, List]:
+    """Run a figure grid on the compiled sweep engine.
+
+    ``axes`` follows :func:`repro.experiments.run_sweep` (vmapped:
+    ``p_avg`` / ``power_schedule`` / ``seed`` / ``m_active``; static: any
+    OTAConfig field, e.g. ``scheme`` / ``s_frac``); ``ota_kw`` fills the
+    base OTAConfig via :func:`ota`.  Emits the same
+    ``figure,series,step,acc`` rows and ``(name, us_per_call, final_acc)``
+    summary entries as :func:`run_series` — ``series_fn(record)`` names
+    each grid point.  Returns (SweepResult, summary).
+    """
+    from repro.experiments import run_sweep
+    steps = steps or SCALE.steps
+    scheme0 = (axes["scheme"][0] if "scheme" in axes
+               else ota_kw.pop("scheme"))
+    base = ota(scheme0, total_steps=steps, **ota_kw)
+    res = run_sweep(dev_data, test_data, base, axes, steps=steps,
+                    lr=lr or SCALE.lr, eval_every=SCALE.eval_every)
+    summary = []
+    for rec in res.records:
+        series = series_fn(rec)
+        if rows is not None:
+            for i, acc in enumerate(rec["accs"]):
+                step = min(i * SCALE.eval_every, steps - 1)
+                rows.append(f"{fig},{series},{step},{acc:.4f}")
+        summary.append((f"{fig}_{series}", rec["us_per_call"],
+                        rec["final_acc"]))
+    return res, summary
 
 
 def emit(rows: List[str]) -> None:

@@ -1,20 +1,24 @@
-"""Paper Fig. 3: D-DSGD power-allocation schedules (eq. 45) vs A-DSGD."""
-from benchmarks.common import dataset, emit, ota, run_series
+"""Paper Fig. 3: D-DSGD power-allocation schedules (eq. 45) vs A-DSGD.
+
+The four schedules ride ONE compiled program: ``power_schedule`` is a
+vmapped sweep axis (each schedule is just a different (T,) P_t array, and
+the digital bit budget q_t is host-precomputed per point and vmapped too).
+"""
+from benchmarks.common import dataset, emit, sweep_series
 
 
 def main(collect=None):
     rows, summary = [], []
     dev, test = dataset(iid=True)
-    for sched in ("constant", "lh_stair", "lh_steps", "hl_steps"):
-        r = run_series("fig3", f"d_dsgd_{sched}", dev, test,
-                       ota("d_dsgd", p_avg=200.0, power_schedule=sched),
-                       rows=rows)
-        summary.append((f"fig3_d_dsgd_{sched}", r["us_per_call"],
-                        r["final_acc"]))
-    for scheme in ("a_dsgd", "ideal"):
-        r = run_series("fig3", scheme, dev, test, ota(scheme, p_avg=200.0),
-                       rows=rows)
-        summary.append((f"fig3_{scheme}", r["us_per_call"], r["final_acc"]))
+    _, s = sweep_series(
+        "fig3", dev, test,
+        {"power_schedule": ["constant", "lh_stair", "lh_steps", "hl_steps"]},
+        lambda r: f"d_dsgd_{r['power_schedule']}", rows=rows,
+        scheme="d_dsgd", p_avg=200.0)
+    summary.extend(s)
+    _, s = sweep_series("fig3", dev, test, {"scheme": ["a_dsgd", "ideal"]},
+                        lambda r: r["scheme"], rows=rows, p_avg=200.0)
+    summary.extend(s)
     emit(rows)
     if collect is not None:
         collect.extend(summary)

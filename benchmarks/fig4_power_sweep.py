@@ -1,18 +1,24 @@
-"""Paper Fig. 4: P-bar in {200, 1000} — A-DSGD robust, D-DSGD degrades."""
-from benchmarks.common import dataset, emit, ota, run_series
+"""Paper Fig. 4: P-bar in {200, 1000} — A-DSGD robust, D-DSGD degrades.
+
+Per scheme, the P-bar grid is vmapped over one jitted scan-over-rounds
+(tests/test_experiments.py pins the vmapped grid bitwise against looped
+``run_federated`` runs).
+"""
+from benchmarks.common import dataset, emit, sweep_series
 
 
 def main(collect=None):
     rows, summary = [], []
     dev, test = dataset(iid=True)
-    for p in (200.0, 1000.0):
-        for scheme in ("a_dsgd", "d_dsgd"):
-            r = run_series("fig4", f"{scheme}_P{int(p)}", dev, test,
-                           ota(scheme, p_avg=p), rows=rows)
-            summary.append((f"fig4_{scheme}_P{int(p)}", r["us_per_call"],
-                            r["final_acc"]))
-    r = run_series("fig4", "ideal", dev, test, ota("ideal"), rows=rows)
-    summary.append(("fig4_ideal", r["us_per_call"], r["final_acc"]))
+    _, s = sweep_series("fig4", dev, test,
+                        {"scheme": ["a_dsgd", "d_dsgd"],
+                         "p_avg": [200.0, 1000.0]},
+                        lambda r: f"{r['scheme']}_P{int(r['p_avg'])}",
+                        rows=rows)
+    summary.extend(s)
+    _, s = sweep_series("fig4", dev, test, {"scheme": ["ideal"]},
+                        lambda r: "ideal", rows=rows)
+    summary.extend(s)
     emit(rows)
     if collect is not None:
         collect.extend(summary)

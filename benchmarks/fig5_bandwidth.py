@@ -1,16 +1,22 @@
-"""Paper Fig. 5: channel bandwidth s in {d/2, 3d/10} — A-DSGD robust."""
-from benchmarks.common import dataset, emit, ota, run_series
+"""Paper Fig. 5: channel bandwidth s in {d/2, 3d/10} — A-DSGD robust.
+
+s changes the projector shape, so ``s_frac`` is a static sweep axis: four
+compiled scan-over-rounds programs, no Python per-round loops.
+"""
+from benchmarks.common import dataset, emit, sweep_series
+
+TAGS = {0.5: "d2", 0.3: "3d10"}
 
 
 def main(collect=None):
     rows, summary = [], []
     dev, test = dataset(iid=True, m=10)
-    for s_frac, tag in ((0.5, "d2"), (0.3, "3d10")):
-        for scheme in ("a_dsgd", "d_dsgd"):
-            r = run_series("fig5", f"{scheme}_s{tag}", dev, test,
-                           ota(scheme, s_frac=s_frac), rows=rows)
-            summary.append((f"fig5_{scheme}_s{tag}", r["us_per_call"],
-                            r["final_acc"]))
+    _, s = sweep_series("fig5", dev, test,
+                        {"scheme": ["a_dsgd", "d_dsgd"],
+                         "s_frac": [0.5, 0.3]},
+                        lambda r: f"{r['scheme']}_s{TAGS[r['s_frac']]}",
+                        rows=rows)
+    summary.extend(s)
     emit(rows)
     if collect is not None:
         collect.extend(summary)

@@ -1,19 +1,24 @@
-"""Paper Fig. 6: (M, B) scaling at fixed M*B, P-bar in {1, 500}."""
-from benchmarks.common import SCALE, dataset, emit, ota, run_series
+"""Paper Fig. 6: (M, B) scaling at fixed M*B, P-bar in {1, 500}.
+
+Each (M, B) pair re-splits the data (B changes with M), so M is swept at
+the dataset level; within each split the P-bar axis is vmapped over the
+compiled scan.  (Fixed-B device sweeps can instead vmap the ``m_active``
+mask axis — see docs/EXPERIMENTS.md.)
+"""
+from benchmarks.common import dataset, emit, sweep_series
 
 
 def main(collect=None):
     rows, summary = [], []
     total = 4000
     for m in (5, 10):
-        b = total // m
-        dev, test = dataset(iid=True, m=m, b=b)
-        for p in (1.0, 500.0):
-            for scheme in ("a_dsgd", "d_dsgd"):
-                r = run_series("fig6", f"{scheme}_M{m}_P{int(p)}", dev, test,
-                               ota(scheme, p_avg=p, s_frac=0.25), rows=rows)
-                summary.append((f"fig6_{scheme}_M{m}_P{int(p)}",
-                                r["us_per_call"], r["final_acc"]))
+        dev, test = dataset(iid=True, m=m, b=total // m)
+        _, s = sweep_series(
+            "fig6", dev, test,
+            {"scheme": ["a_dsgd", "d_dsgd"], "p_avg": [1.0, 500.0]},
+            lambda r: f"{r['scheme']}_M{m}_P{int(r['p_avg'])}",
+            rows=rows, s_frac=0.25)
+        summary.extend(s)
     emit(rows)
     if collect is not None:
         collect.extend(summary)

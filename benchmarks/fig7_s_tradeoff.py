@@ -2,24 +2,26 @@
 
 (a) accuracy vs iteration; (b) accuracy vs total transmitted symbols t*s.
 """
-from benchmarks.common import SCALE, dataset, emit, ota, run_series
+from benchmarks.common import SCALE, dataset, emit, sweep_series
+
+TAGS = {0.1: "d10", 0.2: "d5", 0.5: "d2"}
 
 
 def main(collect=None):
     rows, summary = [], []
     dev, test = dataset(iid=True)
-    for s_frac, tag in ((0.1, "d10"), (0.2, "d5"), (0.5, "d2")):
-        r = run_series("fig7", f"a_dsgd_s{tag}", dev, test,
-                       ota("a_dsgd", s_frac=s_frac, k_frac=0.8, p_avg=50.0),
-                       rows=rows)
-        summary.append((f"fig7_a_dsgd_s{tag}", r["us_per_call"],
-                        r["final_acc"]))
-        # (b): emit symbol-count series for the same run
-        accs = r["run"].accs
-        d = 7850
-        for i, acc in enumerate(accs):
+    res, s = sweep_series("fig7", dev, test, {"s_frac": [0.1, 0.2, 0.5]},
+                          lambda r: f"a_dsgd_s{TAGS[r['s_frac']]}",
+                          rows=rows, scheme="a_dsgd", k_frac=0.8, p_avg=50.0)
+    summary.extend(s)
+    # (b): emit symbol-count series for the same records
+    d = 7850
+    for rec in res.records:
+        s_frac = rec["s_frac"]
+        for i, acc in enumerate(rec["accs"]):
             step = min(i * SCALE.eval_every, SCALE.steps - 1)
-            rows.append(f"fig7b,a_dsgd_s{tag},{int(step * s_frac * d)},{acc:.4f}")
+            rows.append(f"fig7b,a_dsgd_s{TAGS[s_frac]},"
+                        f"{int(step * s_frac * d)},{acc:.4f}")
     emit(rows)
     if collect is not None:
         collect.extend(summary)

@@ -16,9 +16,10 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, convergence_bound, fig2_schemes,
-                            fig3_power_alloc, fig4_power_sweep, fig5_bandwidth,
-                            fig6_devices, fig7_s_tradeoff, roofline)
+    from benchmarks import (bench_kernels, bench_sweeps, convergence_bound,
+                            fig2_schemes, fig3_power_alloc, fig4_power_sweep,
+                            fig5_bandwidth, fig6_devices, fig7_s_tradeoff,
+                            fig8_bias, roofline)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "fig2": fig2_schemes.main,
@@ -27,9 +28,11 @@ def main() -> None:
         "fig5": fig5_bandwidth.main,
         "fig6": fig6_devices.main,
         "fig7": fig7_s_tradeoff.main,
+        "fig8": fig8_bias.main,
         "thm1": convergence_bound.main,
         "roofline": roofline.main,
         "kernels": bench_kernels.main,
+        "sweeps": bench_sweeps.main,
     }
     summary = []
     for name, fn in benches.items():

@@ -3,12 +3,14 @@
 Ten simulated edge devices collaboratively train the paper's single-layer
 classifier over a bandwidth-limited Gaussian MAC with A-DSGD (analog
 over-the-air aggregation), and we compare against the error-free bound.
+Each run executes as ONE jitted scan over rounds (the compiled experiment
+engine, docs/EXPERIMENTS.md) — no Python per-round loop.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.base import OTAConfig
 from repro.data.synthetic import federated_split, make_classification
-from repro.train.paper_repro import run_federated
+from repro.experiments import run_compiled
 
 # 1) data: 10 devices x 400 local samples (MNIST-surrogate, offline)
 (x_train, y_train), (x_test, y_test) = make_classification(
@@ -29,10 +31,10 @@ fading = OTAConfig(scheme="a_dsgd_fading", s_frac=0.5, k_frac=0.25,
                    fading_threshold=0.3)
 ideal = OTAConfig(scheme="ideal", total_steps=40)
 
-# 3) train
+# 3) train — one compiled scan per config
 for name, cfg in (("error-free shared link", ideal), ("A-DSGD", adsgd),
                   ("A-DSGD (Rayleigh fading)", fading)):
-    run = run_federated(x_dev, y_dev, x_test, y_test, cfg, steps=40,
-                        lr=1e-3, eval_every=10)
+    run = run_compiled(x_dev, y_dev, x_test, y_test, cfg, steps=40,
+                       lr=1e-3, eval_every=10)
     print(f"{name:24s} accuracy trajectory: "
           + " ".join(f"{a:.3f}" for a in run.accs))

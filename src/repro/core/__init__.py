@@ -2,7 +2,6 @@ from repro.core.schemes import (  # noqa: F401
     MACContext, PAPER_SCHEMES, Scheme, get_scheme, register_scheme,
     registered_schemes, round_sharded, round_simulated,
 )
-from repro.core.aggregators import Aggregator, make_aggregator  # noqa: F401  (deprecated shims)
 from repro.core.projection import (  # noqa: F401
     BlockedProjector, DenseProjector, make_projector,
 )

@@ -25,13 +25,11 @@ through an SMEM operand, so PS and devices stay consistent by construction.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import OTAConfig
 from repro.core import channel
 from repro.kernels import ref
 
@@ -168,41 +166,3 @@ def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
     ghat_slice = scheme.decode_slice({"body": y_body, "slots": y_slots},
                                      step, ctx)
     return ghat_slice, new_delta, metrics
-
-
-# ---------------------------------------------------------------------------
-# deprecated pre-registry entry point (one-PR grace period)
-# ---------------------------------------------------------------------------
-
-
-def sharded_ota_round(g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
-                      step, key, cfg: OTAConfig, *,
-                      device_axes: Sequence[str], shard_axes: Sequence[str],
-                      m_devices: int, d_pad: int, p_sched: jnp.ndarray,
-                      pre_average_groups=None,
-                      sample_per_shard: int = 4096,
-                      chunk_blocks: int = 8,
-                      p_scale: float = 1.0,
-                      key_salt: int = 0,
-                      frame_dtype=None,
-                      shard_decode: bool = False
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
-    """Deprecated: build an A-DSGD scheme + MACContext and call
-    :func:`sharded_round` instead (repro.core.schemes.get_scheme)."""
-    from repro.core.schemes import ADSGDScheme, MACContext
-    warnings.warn("sharded_ota_round is deprecated; use "
-                  "repro.core.distributed.sharded_round with a Scheme from "
-                  "repro.core.schemes.get_scheme", DeprecationWarning,
-                  stacklevel=2)
-    scheme = ADSGDScheme(cfg, d_pad, m_devices)
-    scheme.p_sched = p_sched
-    ctx = MACContext(
-        m=m_devices, device_axes=tuple(device_axes),
-        shard_axes=tuple(shard_axes),
-        groups=(tuple(tuple(g) for g in pre_average_groups)
-                if pre_average_groups is not None else None),
-        d_pad=d_pad, p_scale=p_scale, key_salt=key_salt,
-        sample_per_shard=sample_per_shard, chunk_blocks=chunk_blocks,
-        frame_dtype=frame_dtype, shard_decode=shard_decode,
-        use_kernel=cfg.use_kernel)
-    return sharded_round(scheme, g_slice, delta_slice, step, key, ctx)

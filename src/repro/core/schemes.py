@@ -46,6 +46,7 @@ Registering a new scheme takes ~10 lines::
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from dataclasses import dataclass
 from functools import cached_property
@@ -185,6 +186,24 @@ class Scheme:
         """Channel uses consumed per round for a d-dim gradient."""
         raise NotImplementedError
 
+    def with_overrides(self, **attrs) -> "Scheme":
+        """Shallow copy with attributes replaced — the sweep-engine hook.
+
+        ``repro.experiments`` vmaps whole sweep grids through one trace by
+        swapping the *schedule arrays* (``p_sched``, and ``q_sched`` for the
+        digital schemes) for batched tracers per grid point; everything
+        shape-defining (projector, k, q_max) stays on the copy untouched.
+        Call inside the traced function so the tracers bind per trace.
+        """
+        new = copy.copy(self)
+        for name, value in attrs.items():
+            if not hasattr(new, name):
+                raise AttributeError(
+                    f"scheme {self.name!r} has no attribute {name!r} to "
+                    "override")
+            setattr(new, name, value)
+        return new
+
     def p_t(self, step, p_factor=1.0) -> jnp.ndarray:
         """P_t for this step, scaled by the device's received-power factor."""
         p = self.p_sched[jnp.minimum(step, self.p_sched.shape[0] - 1)]
@@ -283,19 +302,33 @@ class ADSGDScheme(Scheme):
                 f"d={d} to size a different gradient")
         return self.projector.out_dim + 2
 
+    def _projector_for(self, ctx: Optional[MACContext]):
+        """The projector honouring the MACContext's use_kernel override
+        (dense projectors have no kernel path; cfg.use_kernel is baked into
+        the cached projector, so only an upgrade needs a copy)."""
+        proj = self.projector
+        if (ctx is not None and ctx.use_kernel
+                and not isinstance(proj, DenseProjector)
+                and not proj.use_kernel):
+            proj = dataclasses.replace(proj, use_kernel=True)
+        return proj
+
     def encode(self, g, state, step, key, ctx=None):
         cfg = self.cfg
         g = g.astype(jnp.float32)
         p_t = self.p_t(step, ctx.p_factor if ctx is not None else 1.0)
         g_ec = g + state.astype(jnp.float32)
-        if isinstance(self.projector, DenseProjector):
+        projector = self._projector_for(ctx)
+        if isinstance(projector, DenseProjector):
             g_sp = compression.top_k_sparsify(g_ec, self.k)
             new_state = g_ec - g_sp
         else:
             tau = compression.sampled_topk_threshold(g_ec, self.k, key)
             g_sp, new_state = ops.ef_sparsify(
-                g, state.astype(jnp.float32), tau, use_kernel=cfg.use_kernel)
-        g_tilde = self.projector.project(g_sp)
+                g, state.astype(jnp.float32), tau,
+                use_kernel=self._use_kernel(ctx) if ctx is not None
+                else cfg.use_kernel)
+        g_tilde = projector.project(g_sp)
         use_mr = (jnp.asarray(step) < cfg.mean_removal_steps)
         frame, alpha = channel.make_frame(g_tilde, p_t, use_mr)
         metrics = {"alpha": alpha, "p_t": p_t,
@@ -305,7 +338,8 @@ class ADSGDScheme(Scheme):
     def decode(self, y, step, ctx=None):
         use_mr = (jnp.asarray(step) < self.cfg.mean_removal_steps)
         y_body = channel.ps_normalize(y, use_mr)
-        return amp_decode(y_body, self.projector, self.cfg.amp_iters)
+        return amp_decode(y_body, self._projector_for(ctx),
+                          self.cfg.amp_iters)
 
     # ------------------------------------------------------ slice hooks
     # The fully-sharded pipeline (train/trainer.py phase 2): every device
@@ -444,13 +478,19 @@ class _BitBudgetScheme(Scheme):
 
     def __init__(self, cfg: OTAConfig, d: int, m: int):
         super().__init__(cfg, d, m)
-        s = cfg.s_for(d)
-        q_cap = min(d // 2, 1 << 16)
-        q_np = compression.digital_q_schedule(
-            d, s, m, self._p_np, cfg.sigma2, scheme=self.name,
-            l_q=cfg.quant_bits, q_cap=q_cap)
+        q_np = self.build_q_schedule(m, self._p_np)
         self.q_sched = jnp.asarray(q_np, jnp.int32)
         self.q_max = int(max(int(q_np.max()), 1))
+
+    def build_q_schedule(self, m: int, p_np) -> Any:
+        """Host-precomputed q_t array for an (m, P_t) pair — the single
+        source of the budget/cap rule, shared with the sweep engine
+        (repro.experiments.sweep precomputes per-grid-point schedules
+        with the effective device count and vmaps them)."""
+        return compression.digital_q_schedule(
+            self.d, self.cfg.s_for(self.d), m, p_np, self.cfg.sigma2,
+            scheme=self.name, l_q=self.cfg.quant_bits,
+            q_cap=min(self.d // 2, 1 << 16))
 
     def channel_dim(self, d: Optional[int] = None) -> int:
         return self.cfg.s_for(self.d if d is None else d)

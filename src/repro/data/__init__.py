@@ -1,3 +1,7 @@
+from repro.data.partition import (  # noqa: F401
+    PARTITION_KINDS, label_bias, label_shard_assignment, make_partition,
+    partition_dirichlet, partition_iid, partition_label_shards,
+)
 from repro.data.synthetic import (  # noqa: F401
     TokenStream, federated_split, make_classification,
 )

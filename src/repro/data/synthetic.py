@@ -82,23 +82,19 @@ def make_classification(n_train: int = 60000, n_test: int = 10000,
 
 
 def federated_split(x: np.ndarray, y: np.ndarray, m: int, b: int,
-                    iid: bool = True, n_classes: int = 10, seed: int = 0
+                    iid: bool = True, n_classes: int = 10, seed: int = 0,
+                    kind: str = "", beta: float = 1.0
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Assign B samples to each of M devices (paper §VI).
 
-    IID: uniform random.  Non-IID: each device draws B/2 samples from each of
-    two randomly chosen classes (the paper's label-skew protocol).
-    Returns (x_dev (M, B, d), y_dev (M, B)).
+    Thin front-end over :mod:`repro.data.partition`.  ``iid`` keeps the
+    paper's two protocols (uniform / two classes per device); ``kind``
+    overrides it with any registered partitioner (``iid`` |
+    ``label_shards`` | ``dirichlet`` with bias knob ``beta`` — see
+    ``docs/EXPERIMENTS.md``).  Returns (x_dev (M, B, d), y_dev (M, B)).
     """
-    rng = np.random.default_rng(seed)
-    if iid:
-        idx = rng.choice(len(x), (m, b), replace=False)
-    else:
-        idx = np.empty((m, b), np.int64)
-        by_class = [np.flatnonzero(y == c) for c in range(n_classes)]
-        for dev in range(m):
-            c1, c2 = rng.choice(n_classes, 2, replace=False)
-            half = b // 2
-            idx[dev, :half] = rng.choice(by_class[c1], half, replace=False)
-            idx[dev, half:] = rng.choice(by_class[c2], b - half, replace=False)
-    return x[idx], y[idx]
+    from repro.data.partition import make_partition
+    if not kind:
+        kind = "iid" if iid else "label_shards"
+    return make_partition(x, y, m, b, kind=kind, beta=beta,
+                          n_classes=n_classes, seed=seed)

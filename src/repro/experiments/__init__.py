@@ -1,0 +1,16 @@
+"""repro.experiments: the compiled experiment engine behind the paper figures.
+
+One federated run — device gradients, scheme encode, MAC superposition, PS
+decode, ADAM update — is a single ``jax.lax.scan`` over rounds inside one
+``jit`` (:mod:`repro.experiments.engine`); sweep grids vmap schedule-shaped
+axes on top of the scan so a paper figure executes as one XLA program
+(:mod:`repro.experiments.sweep`).  See ``docs/EXPERIMENTS.md`` for the
+guide and ``docs/DESIGN.md`` §6 for what is traced vs static.
+"""
+from repro.experiments.engine import (  # noqa: F401
+    CompiledExperiment, EngineRun, Experiment, eval_indices, round_keys,
+    round_masked, run_compiled,
+)
+from repro.experiments.sweep import (  # noqa: F401
+    VMAP_AXES, SweepResult, run_sweep,
+)

@@ -1,0 +1,253 @@
+"""Compiled experiment engine: a federated run as ONE jitted ``lax.scan``.
+
+``train/paper_repro.run_federated`` is the reference implementation — a
+Python loop dispatching one jitted round at a time, with host evals in
+between.  This module compiles the *entire run* instead: the scan carry is
+``(params, opt_state, deltas, momenta)``, each scan step performs the full
+round (per-device gradients -> scheme encode -> MAC -> PS decode -> ADAM)
+with the paper's per-round key stream, and test accuracy/loss are computed
+inside the scan, so ``steps`` rounds cost one XLA dispatch and zero host
+round-trips.  ``repro.experiments.sweep`` vmaps whole sweep grids over the
+scan (see docs/DESIGN.md §6 for the traced/static split).
+
+The round body is built from the same pieces as the reference loop
+(``device_grads``, ``round_simulated``, ``Optimizer.apply``), which is what
+the bitwise parity test in ``tests/test_experiments.py`` pins.
+
+Device-count sweeps use :func:`round_masked`: M is a *shape*, so a vmapped
+M-axis pads every grid point to ``M_pad`` devices and silences the padding
+with a traced participation mask (docs/DESIGN.md §6 explains why padding,
+not reshaping, is the only way to put M on a vmap axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OTAConfig
+from repro.core import channel
+from repro.core.schemes import MACContext, Scheme, get_scheme, round_simulated
+from repro.optim.optim import Optimizer
+from repro.train.paper_repro import (
+    accuracy, ce_loss, device_grads, init_linear,
+)
+
+#: base of the per-round key stream; round t of seed 0 uses PRNGKey(1000 + t),
+#: matching run_federated exactly (seed k shifts the stream by k * steps so
+#: seed sweeps draw disjoint keys)
+KEY_STREAM_BASE = 1000
+
+
+def round_keys(steps: int, seed: int = 0) -> jnp.ndarray:
+    """(steps, ...) stacked per-round PRNG keys for one run."""
+    seeds = KEY_STREAM_BASE + seed * steps + jnp.arange(steps)
+    return jax.vmap(jax.random.PRNGKey)(seeds)
+
+
+def eval_indices(steps: int, eval_every: int) -> np.ndarray:
+    """The rounds run_federated evaluates after (t % every == 0 or last)."""
+    return np.asarray([t for t in range(steps)
+                       if t % eval_every == 0 or t == steps - 1], np.int64)
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """Static description of one federated training configuration."""
+    cfg: OTAConfig
+    steps: int
+    lr: float = 1e-3
+    eval_every: int = 10
+    optimizer: str = "adam"
+    local_steps: int = 1
+    local_lr: float = 0.1
+    momentum_correction: float = 0.0
+    seed: int = 0
+    use_kernel: bool = False     # Pallas projection/AMP inside the scan
+
+
+@dataclass
+class EngineRun:
+    """Result of one compiled run — mirrors FederatedRun at eval points."""
+    accs: List[float]
+    losses: List[float]
+    metrics: List[Dict[str, float]]
+    eval_steps: np.ndarray
+    all_accs: np.ndarray         # (steps,) — every round, free inside scan
+    all_losses: np.ndarray
+    params: Any = None           # final model parameters (pytree)
+
+
+# ---------------------------------------------------------------------------
+# masked round (padded device-count sweeps)
+# ---------------------------------------------------------------------------
+
+
+def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
+                 step, key: jnp.ndarray, mask: jnp.ndarray, ctx: MACContext):
+    """:func:`~repro.core.schemes.round_simulated` with a traced device mask.
+
+    ``mask`` (M_pad,) marks which padded devices exist at this grid point:
+    masked-out devices transmit nothing (their frames — including the analog
+    power/mean slots — are zeroed before the MAC sum), keep their error
+    state untouched, and the PS decodes against the traced effective device
+    count.  The RNG layout (key salts, ``split(key, M_pad)``) matches
+    ``round_simulated`` at ``M = M_pad``, so an all-ones mask reproduces it
+    exactly (masking multiplies frames by 1.0 and adds 0.0 to the sum).
+    """
+    m_pad = grads.shape[0]
+    mask_b = mask > 0
+    m_eff = jnp.sum(mask.astype(jnp.float32))
+    ctx = dataclasses.replace(ctx, m=m_eff)
+    dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_pad)
+    p_fac, active = scheme.device_factors(jax.random.fold_in(key, 2), m_pad)
+    frames, new_deltas, metrics = jax.vmap(
+        lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
+                                            ctx.with_p_factor(pf)))(
+            grads, deltas, dev_keys, p_fac)
+    if scheme.analog:
+        new_deltas = jnp.where(active[:, None], new_deltas,
+                               scheme.silent_state(grads, deltas, new_deltas))
+        active = active & mask_b
+        frames = frames * active[:, None]
+        y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
+                            scheme.cfg.sigma2)
+    else:
+        active = active & mask_b
+        frames = frames * mask_b[:, None]
+        y = jnp.sum(frames, axis=0)
+    # padded devices do not exist: their error state must not evolve
+    new_deltas = jnp.where(mask_b[:, None], new_deltas, deltas)
+    ghat = scheme.decode(y, step, ctx)
+    w = mask.astype(jnp.float32)
+    metrics = {k: jnp.sum(v * w) / m_eff for k, v in metrics.items()}
+    metrics["active_frac"] = jnp.sum(active.astype(jnp.float32)) / m_eff
+    return ghat, new_deltas, metrics
+
+
+# ---------------------------------------------------------------------------
+# the compiled runner
+# ---------------------------------------------------------------------------
+
+
+class CompiledExperiment:
+    """Compile-once runner for one static configuration.
+
+    :meth:`run` (and :meth:`run_masked`) are pure traced functions —
+    ``jit``/``vmap`` them freely.  ``overrides`` swaps per-grid-point
+    schedule arrays onto the scheme (``p_sched``, ``q_sched``) via
+    :meth:`Scheme.with_overrides`; everything else about the scheme is
+    static and shared by every point in a vmapped grid.
+    """
+
+    def __init__(self, x_dev: np.ndarray, y_dev: np.ndarray,
+                 x_test: np.ndarray, y_test: np.ndarray, exp: Experiment):
+        m, b, dim = x_dev.shape
+        self.exp = exp
+        self.m = m
+        n_classes = int(np.max(y_dev)) + 1
+        params = init_linear(dim, n_classes, jax.random.PRNGKey(exp.seed))
+        flat0, self.unravel = jax.flatten_util.ravel_pytree(params)
+        self.d = flat0.shape[0]
+        self.params0 = params
+        self.scheme = get_scheme(exp.cfg, self.d, m)
+        self.opt = Optimizer(name=exp.optimizer, lr=exp.lr)
+        self.xd, self.yd = jnp.asarray(x_dev), jnp.asarray(y_dev)
+        self.xt, self.yt = jnp.asarray(x_test), jnp.asarray(y_test)
+        self.ctx = MACContext(
+            m=m, fading=exp.cfg.fading,
+            use_kernel=exp.use_kernel or exp.cfg.use_kernel)
+
+    # ------------------------------------------------------------- pieces
+    def _carry0(self):
+        return (self.params0, self.opt.init(self.params0),
+                jnp.zeros((self.m, self.d), jnp.float32),
+                jnp.zeros((self.m, self.d), jnp.float32))
+
+    def _round(self, sch: Scheme, carry, t, key, mask):
+        params, opt_state, deltas, momenta = carry
+        exp = self.exp
+        grads, momenta = device_grads(
+            params, self.unravel, self.xd, self.yd, momenta,
+            local_steps=exp.local_steps, local_lr=exp.local_lr,
+            momentum_correction=exp.momentum_correction)
+        if mask is None:
+            ghat, deltas, met = round_simulated(sch, grads, deltas, t, key,
+                                                self.ctx)
+        else:
+            ghat, deltas, met = round_masked(sch, grads, deltas, t, key,
+                                             mask, self.ctx)
+        params, opt_state = self.opt.apply(params, self.unravel(ghat),
+                                           opt_state)
+        out = {"acc": accuracy(params, self.xt, self.yt),
+               "loss": ce_loss(params, self.xt, self.yt),
+               "metrics": met}
+        return (params, opt_state, deltas, momenta), out
+
+    def _scan(self, overrides, keys, mask):
+        sch = (self.scheme.with_overrides(**overrides) if overrides
+               else self.scheme)
+        steps = self.exp.steps
+
+        def body(carry, inp):
+            t, key = inp
+            return self._round(sch, carry, t, key, mask)
+
+        carry, outs = jax.lax.scan(body, self._carry0(),
+                                   (jnp.arange(steps), keys))
+        outs["params"] = carry[0]
+        return outs
+
+    # ------------------------------------------------------- traced entry
+    def run(self, overrides: Dict[str, jnp.ndarray], keys: jnp.ndarray):
+        """One full run. Returns {"acc": (steps,), "loss": (steps,),
+        "metrics": {...: (steps,)}, "params": pytree}."""
+        return self._scan(overrides, keys, None)
+
+    def run_masked(self, overrides: Dict[str, jnp.ndarray],
+                   keys: jnp.ndarray, mask: jnp.ndarray):
+        """Padded-M variant: mask (M_pad,) marks live devices."""
+        return self._scan(overrides, keys, mask)
+
+
+def _subsample(outs, exp: Experiment) -> EngineRun:
+    idx = eval_indices(exp.steps, exp.eval_every)
+    accs = np.asarray(outs["acc"])
+    losses = np.asarray(outs["loss"])
+    mets = {k: np.asarray(v) for k, v in outs["metrics"].items()}
+    return EngineRun(
+        accs=[float(accs[i]) for i in idx],
+        losses=[float(losses[i]) for i in idx],
+        metrics=[{k: float(v[i]) for k, v in mets.items()} for i in idx],
+        eval_steps=idx, all_accs=accs, all_losses=losses,
+        params=outs.get("params"))
+
+
+def run_compiled(x_dev: np.ndarray, y_dev: np.ndarray, x_test: np.ndarray,
+                 y_test: np.ndarray, cfg: OTAConfig, steps: int,
+                 lr: float = 1e-3, eval_every: int = 10, seed: int = 0,
+                 optimizer: str = "adam", local_steps: int = 1,
+                 local_lr: float = 0.1, momentum_correction: float = 0.0,
+                 use_kernel: bool = False) -> EngineRun:
+    """Compiled replacement for ``run_federated``: same model, same
+    schedule — one jitted scan instead of a Python loop.  At ``seed=0``
+    the per-round key stream is ``run_federated``'s exactly
+    (``PRNGKey(1000 + t)``), so ``accs`` / ``losses`` / ``metrics`` match
+    ``FederatedRun``'s lists entry for entry (pinned by
+    tests/test_experiments.py).  Nonzero ``seed`` shifts the stream to a
+    disjoint key range for independent replicas — a knob the reference
+    loop does not have (its ``seed`` argument never reaches the round
+    keys), so cross-implementation parity holds at seed 0 only."""
+    exp = Experiment(cfg=cfg, steps=steps, lr=lr, eval_every=eval_every,
+                     optimizer=optimizer, local_steps=local_steps,
+                     local_lr=local_lr, momentum_correction=momentum_correction,
+                     seed=seed, use_kernel=use_kernel)
+    ce = CompiledExperiment(x_dev, y_dev, x_test, y_test, exp)
+    outs = jax.jit(ce.run)({}, round_keys(steps, seed))
+    outs = jax.tree.map(np.asarray, outs)
+    return _subsample(outs, exp)

@@ -1,0 +1,169 @@
+"""Sweep grids over the compiled engine: vmap what traces, compile the rest.
+
+A sweep axis is either *schedule-shaped* — its value enters the round as an
+array of per-step scalars, so a whole grid of values rides one trace as a
+vmapped batch — or *shape-defining* — it changes array shapes or the
+compiled structure (projector size, scheme class), so each value needs its
+own XLA program (still a single scan-over-rounds each, never a Python
+per-round loop).
+
+vmapped axes (``VMAP_AXES``):
+
+``p_avg``          average power P-bar  -> the (T,) power schedule array
+``power_schedule`` schedule shape       -> the same (T,) array
+``seed``           round-key stream     -> the (T, key) array
+``m_active``       device count         -> a traced participation mask over
+                                           M_pad padded devices
+                                           (:func:`engine.round_masked`)
+
+Everything else (``scheme``, ``s_frac``, ``k_frac``, ``projection``,
+``amp_iters``, ``sigma2``, ...) is an ``OTAConfig`` field swept statically:
+the grid is grouped by static combo, one compile per combo, and the
+vmapped sub-grid runs inside it.  For the digital schemes the per-step bit
+budget ``q_t`` is host-precomputed per grid point and vmapped alongside the
+power schedule (the static ``q_max`` bound is shared across the grid —
+``top_k``'s q-th value is invariant to computing extra entries, so results
+are bitwise identical to per-point bounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OTAConfig
+from repro.core import power
+from repro.experiments.engine import (
+    CompiledExperiment, Experiment, eval_indices, round_keys,
+)
+
+#: axes realised as vmapped per-point arrays on one trace
+VMAP_AXES = ("p_avg", "power_schedule", "seed", "m_active")
+
+
+@dataclass
+class SweepResult:
+    """One record per grid point, ``accs``/``final_acc`` at eval steps —
+    the same reading ``benchmarks.common.run_series`` extracts from a
+    looped ``FederatedRun``."""
+    records: List[Dict[str, Any]]
+    eval_steps: np.ndarray
+    steps: int
+    wall_s: float
+
+    def record(self, **axis_values) -> Dict[str, Any]:
+        """The unique record matching the given axis values."""
+        hits = [r for r in self.records
+                if all(r[k] == v for k, v in axis_values.items())]
+        if len(hits) != 1:
+            raise KeyError(f"{axis_values} matched {len(hits)} records")
+        return hits[0]
+
+
+def _validate_axes(axes: Dict[str, Sequence], base: OTAConfig) -> None:
+    cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
+    for name, values in axes.items():
+        if name not in VMAP_AXES and name not in cfg_fields:
+            raise KeyError(
+                f"unknown sweep axis {name!r}: vmapped axes are "
+                f"{VMAP_AXES}, static axes are OTAConfig fields")
+        if not len(list(values)):
+            raise ValueError(f"sweep axis {name!r} is empty")
+
+
+def run_sweep(dev_data, test_data, base: OTAConfig,
+              axes: Dict[str, Sequence], *, steps: int, lr: float = 1e-3,
+              eval_every: int = 10, optimizer: str = "adam", seed: int = 0,
+              use_kernel: bool = False) -> SweepResult:
+    """Run the cartesian grid of ``axes`` over ``base``.
+
+    dev_data = (x_dev (M, B, dim), y_dev), test_data = (x_test, y_test).
+    For an ``m_active`` axis the device tensors are the M_pad padding; every
+    value must be <= M_pad.
+    """
+    (xd, yd), (xt, yt) = dev_data, test_data
+    axes = {k: list(v) for k, v in axes.items()}
+    _validate_axes(axes, base)
+    m_pad = xd.shape[0]
+    masked = "m_active" in axes
+    if masked and max(axes["m_active"]) > m_pad:
+        raise ValueError(f"m_active values must be <= M_pad = {m_pad}")
+
+    static_names = [k for k in axes if k not in VMAP_AXES]
+    vmap_names = [k for k in axes if k in VMAP_AXES]
+    records: List[Dict[str, Any]] = []
+    t0 = time.time()
+
+    for static_vals in itertools.product(*[axes[k] for k in static_names]):
+        static_d = dict(zip(static_names, static_vals))
+        cfg = dataclasses.replace(base, **static_d)
+        exp = Experiment(cfg=cfg, steps=steps, lr=lr, eval_every=eval_every,
+                         optimizer=optimizer, seed=seed,
+                         use_kernel=use_kernel)
+        ce = CompiledExperiment(xd, yd, xt, yt, exp)
+        digital = hasattr(ce.scheme, "q_sched")
+
+        grid = ([dict(zip(vmap_names, vals)) for vals in itertools.product(
+            *[axes[k] for k in vmap_names])] if vmap_names else [{}])
+
+        # --- per-point schedule arrays (host precompute) -----------------
+        p_rows, q_rows, key_rows, mask_rows = [], [], [], []
+        for point in grid:
+            p_avg = point.get("p_avg", cfg.p_avg)
+            sched = point.get("power_schedule", cfg.power_schedule)
+            m_eff = point.get("m_active", m_pad)
+            p_np = power.schedule_array(cfg.total_steps, p_avg, sched)
+            p_rows.append(np.asarray(p_np, np.float32))
+            if digital:
+                # the scheme's own budget/cap rule, with this point's
+                # effective device count
+                q_rows.append(ce.scheme.build_q_schedule(m_eff, p_np))
+            key_rows.append(round_keys(steps, point.get("seed", seed)))
+            if masked:
+                mask_rows.append(
+                    (np.arange(m_pad) < m_eff).astype(np.float32))
+
+        overrides = {"p_sched": jnp.asarray(np.stack(p_rows))}
+        if digital:
+            q_grid = np.stack(q_rows)
+            ce.scheme.q_max = int(max(int(q_grid.max()), 1))
+            overrides["q_sched"] = jnp.asarray(q_grid, jnp.int32)
+        keys = jnp.stack(key_rows)
+
+        # --- one XLA program for the whole vmapped sub-grid --------------
+        ov_axes = {k: 0 for k in overrides}
+        if masked:
+            masks = jnp.asarray(np.stack(mask_rows))
+            outs = jax.jit(jax.vmap(ce.run_masked,
+                                    in_axes=(ov_axes, 0, 0)))(
+                overrides, keys, masks)
+        else:
+            outs = jax.jit(jax.vmap(ce.run, in_axes=(ov_axes, 0)))(
+                overrides, keys)
+        outs.pop("params")
+        outs = jax.tree.map(np.asarray, outs)
+
+        idx = eval_indices(steps, eval_every)
+        for g, point in enumerate(grid):
+            accs = outs["acc"][g]
+            rec: Dict[str, Any] = {**static_d, **point}
+            rec["accs"] = [float(accs[i]) for i in idx]
+            rec["losses"] = [float(outs["loss"][g][i]) for i in idx]
+            rec["metrics"] = [
+                {k: float(v[g][i]) for k, v in outs["metrics"].items()}
+                for i in idx]
+            rec["final_acc"] = rec["accs"][-1]
+            records.append(rec)
+
+    wall = time.time() - t0
+    us = wall / max(len(records) * steps, 1) * 1e6
+    for rec in records:
+        rec["us_per_call"] = us
+    return SweepResult(records=records, eval_steps=eval_indices(
+        steps, eval_every), steps=steps, wall_s=wall)

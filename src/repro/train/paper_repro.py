@@ -1,9 +1,14 @@
 """Paper-scale federated trainer (§VI): M devices, single-layer classifier,
 d = 7850, aggregation over the simulated Gaussian MAC.
 
-This is the harness behind benchmarks/fig2..fig7 and the convergence tests.
-The model/optimizer follow the paper: single-layer softmax network trained
-with ADAM at the PS on the reconstructed gradient.
+:func:`run_federated` is the *looped reference implementation*: one jitted
+round per Python iteration, host evals in between.  The figure benchmarks
+run on the compiled engine instead (:mod:`repro.experiments`: the whole
+run as one jitted scan, grids vmapped on top), which is pinned bitwise
+against this loop by tests/test_experiments.py — both share the
+device-side compute in :func:`device_grads`.  The model/optimizer follow
+the paper: single-layer softmax network trained with ADAM at the PS on
+the reconstructed gradient.
 """
 from __future__ import annotations
 
@@ -46,6 +51,41 @@ class FederatedRun:
     metrics: List[Dict[str, float]] = field(default_factory=list)
 
 
+def flat_grad(params, xm, ym):
+    """One device's flattened gradient on its local batch."""
+    g = jax.grad(ce_loss)(params, xm, ym)
+    return jax.flatten_util.ravel_pytree(g)[0]
+
+
+def flat_local_delta(params, unravel, xm, ym, local_steps: int,
+                     local_lr: float):
+    """J local SGD steps; transmit (theta - theta_m^J)/(J * local_lr)."""
+    wflat = jax.flatten_util.ravel_pytree(params)[0]
+
+    def body(w, _):
+        g = jax.grad(ce_loss)(unravel(w), xm, ym)
+        return w - local_lr * jax.flatten_util.ravel_pytree(g)[0], None
+
+    w_j, _ = jax.lax.scan(body, wflat, None, length=local_steps)
+    return (wflat - w_j) / (local_lr * local_steps)
+
+
+def device_grads(params, unravel, xd, yd, momenta, *, local_steps: int = 1,
+                 local_lr: float = 0.1, momentum_correction: float = 0.0):
+    """(M, d) per-device gradients + updated momenta — the device-side
+    compute shared bitwise between :func:`run_federated` and the compiled
+    engine (:mod:`repro.experiments.engine`)."""
+    if local_steps > 1:
+        grads = jax.vmap(lambda xm, ym: flat_local_delta(
+            params, unravel, xm, ym, local_steps, local_lr))(xd, yd)
+    else:
+        grads = jax.vmap(lambda xm, ym: flat_grad(params, xm, ym))(xd, yd)
+    if momentum_correction > 0:
+        momenta = momentum_correction * momenta + grads
+        grads = momenta
+    return grads, momenta
+
+
 def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
                   x_test: np.ndarray, y_test: np.ndarray,
                   ota: OTAConfig, steps: int, lr: float = 1e-3,
@@ -76,32 +116,11 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
     xd, yd = jnp.asarray(x_dev), jnp.asarray(y_dev)
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
 
-    def local_grad(params, xm, ym):
-        g = jax.grad(ce_loss)(params, xm, ym)
-        return jax.flatten_util.ravel_pytree(g)[0]
-
-    def local_delta(params, xm, ym):
-        """J local SGD steps; transmit (theta - theta_m^J)/local_lr."""
-        wflat = jax.flatten_util.ravel_pytree(params)[0]
-
-        def body(w, _):
-            g = jax.grad(ce_loss)(unravel(w), xm, ym)
-            return w - local_lr * jax.flatten_util.ravel_pytree(g)[0], None
-
-        w_j, _ = jax.lax.scan(body, wflat, None, length=local_steps)
-        return (wflat - w_j) / (local_lr * local_steps)
-
     @jax.jit
     def step_fn(params, opt_state, deltas, momenta, t, kk):
-        if local_steps > 1:
-            grads = jax.vmap(lambda xm, ym: local_delta(params, xm, ym))(xd, yd)
-        else:
-            grads = jax.vmap(lambda xm, ym: local_grad(params, xm, ym))(xd, yd)
-        if momentum_correction > 0:
-            momenta_n = momentum_correction * momenta + grads
-            grads = momenta_n
-        else:
-            momenta_n = momenta
+        grads, momenta_n = device_grads(
+            params, unravel, xd, yd, momenta, local_steps=local_steps,
+            local_lr=local_lr, momentum_correction=momentum_correction)
         ghat, deltas, met = round_simulated(scheme, grads, deltas, t, kk)
         params, opt_state = opt.apply(params, unravel(ghat), opt_state)
         return params, opt_state, deltas, momenta_n, met

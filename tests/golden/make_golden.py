@@ -21,7 +21,7 @@ from tests.golden.parity_cases import PARITY_CASES  # noqa: E402
 
 
 def main() -> None:
-    from repro.core.aggregators import make_aggregator
+    from repro.core.schemes import get_scheme, round_simulated
 
     D, M = 256, 6
     base = jax.random.normal(jax.random.PRNGKey(7), (D,))
@@ -30,9 +30,9 @@ def main() -> None:
     deltas = jnp.zeros((M, D))
     out = {"grads": np.asarray(grads)}
     for name, cfg in PARITY_CASES.items():
-        agg = make_aggregator(cfg, D, M)
-        ghat, nd, _ = agg.round_simulated(grads, deltas, 0,
-                                          jax.random.PRNGKey(11))
+        scheme = get_scheme(cfg, D, M)
+        ghat, nd, _ = round_simulated(scheme, grads, deltas, 0,
+                                      jax.random.PRNGKey(11))
         out[f"{name}__ghat"] = np.asarray(ghat)
         out[f"{name}__deltas"] = np.asarray(nd)
         print(f"{name:16s} ghat[:3] = {np.asarray(ghat)[:3]}")

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import OTAConfig
-from repro.core.aggregators import SCHEMES, make_aggregator
+from repro.core.schemes import get_scheme, round_simulated
 
 D, M = 512, 10
 
@@ -22,10 +22,15 @@ def _cos(a, b):
                  (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-12))
 
 
+def _round(cfg, grads, deltas, step=0, seed=0):
+    scheme = get_scheme(cfg, D, M)
+    return round_simulated(scheme, grads, deltas, step,
+                           jax.random.PRNGKey(seed))
+
+
 def test_ideal_is_exact_mean(grads):
-    agg = make_aggregator(OTAConfig(scheme="ideal", total_steps=10), D, M)
-    ghat, _, _ = agg.round_simulated(grads, jnp.zeros((M, D)), 0,
-                                     jax.random.PRNGKey(0))
+    ghat, _, _ = _round(OTAConfig(scheme="ideal", total_steps=10), grads,
+                        jnp.zeros((M, D)))
     np.testing.assert_allclose(np.asarray(ghat), np.asarray(grads.mean(0)),
                                rtol=1e-5)
 
@@ -35,9 +40,7 @@ def test_adsgd_estimates_mean(grads, projection):
     cfg = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
                     total_steps=10, projection=projection, block_size=128,
                     amp_iters=25, mean_removal_steps=2)
-    agg = make_aggregator(cfg, D, M)
-    ghat, new_deltas, met = agg.round_simulated(
-        grads, jnp.zeros((M, D)), 0, jax.random.PRNGKey(0))
+    ghat, new_deltas, met = _round(cfg, grads, jnp.zeros((M, D)))
     assert _cos(ghat, grads.mean(0)) > 0.5
     assert float(met["frame_power"]) == pytest.approx(500.0, rel=1e-3)
     # error accumulators are nonzero (sparsification residual retained)
@@ -48,10 +51,8 @@ def test_adsgd_error_feedback_reinjects(grads):
     """What is cut at step t is added back at step t+1 (paper eq. 10)."""
     cfg = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
                     total_steps=10, projection="dense", amp_iters=10)
-    agg = make_aggregator(cfg, D, M)
     deltas = jnp.zeros((M, D))
-    _, deltas1, _ = agg.round_simulated(grads, deltas, 0,
-                                        jax.random.PRNGKey(0))
+    _, deltas1, _ = _round(cfg, grads, deltas)
     # EF conservation per device: g_sp + delta' = g + delta
     g_ec = grads + deltas
     from repro.core.compression import top_k_sparsify
@@ -64,9 +65,7 @@ def test_adsgd_error_feedback_reinjects(grads):
 @pytest.mark.parametrize("scheme", ["d_dsgd", "signsgd", "qsgd"])
 def test_digital_schemes_positive_alignment(grads, scheme):
     cfg = OTAConfig(scheme=scheme, s_frac=0.5, p_avg=500.0, total_steps=10)
-    agg = make_aggregator(cfg, D, M)
-    ghat, _, met = agg.round_simulated(grads, jnp.zeros((M, D)), 0,
-                                       jax.random.PRNGKey(0))
+    ghat, _, met = _round(cfg, grads, jnp.zeros((M, D)))
     assert _cos(ghat, grads.mean(0)) > 0.15
     assert int(met["q_t"]) > 0
 
@@ -75,9 +74,7 @@ def test_ddsgd_more_power_better_estimate(grads):
     cos = {}
     for p in (50.0, 5000.0):
         cfg = OTAConfig(scheme="d_dsgd", s_frac=0.5, p_avg=p, total_steps=10)
-        agg = make_aggregator(cfg, D, M)
-        ghat, _, _ = agg.round_simulated(grads, jnp.zeros((M, D)), 0,
-                                         jax.random.PRNGKey(0))
+        ghat, _, _ = _round(cfg, grads, jnp.zeros((M, D)))
         cos[p] = _cos(ghat, grads.mean(0))
     assert cos[5000.0] >= cos[50.0]
 
@@ -89,9 +86,7 @@ def test_adsgd_robust_to_low_power(grads):
         cfg = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=p,
                         total_steps=10, projection="dense", amp_iters=25,
                         mean_removal_steps=0)
-        agg = make_aggregator(cfg, D, M)
-        ghat, _, _ = agg.round_simulated(grads, jnp.zeros((M, D)), 0,
-                                         jax.random.PRNGKey(0))
+        ghat, _, _ = _round(cfg, grads, jnp.zeros((M, D)))
         cos[p] = _cos(ghat, grads.mean(0))
     # still positively aligned at P-bar = 1 (where D-DSGD sends 0 bits);
     # the paper's claim is over many EF-corrected iterations, a single

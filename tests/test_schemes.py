@@ -101,18 +101,6 @@ def test_simulated_driver_bitwise_parity(case):
     np.testing.assert_array_equal(np.asarray(nd), _GOLDEN[f"{case}__deltas"])
 
 
-def test_deprecated_make_aggregator_matches_registry():
-    from repro.core.aggregators import make_aggregator
-    cfg = PARITY_CASES["a_dsgd_dense"]
-    grads = jnp.asarray(_GOLDEN["grads"])
-    with pytest.deprecated_call():
-        agg = make_aggregator(cfg, D, M)
-    ghat, _, _ = agg.round_simulated(grads, jnp.zeros((M, D)), 0,
-                                     jax.random.PRNGKey(11))
-    np.testing.assert_array_equal(np.asarray(ghat),
-                                  _GOLDEN["a_dsgd_dense__ghat"])
-
-
 # ---------------------------------------------------------------------------
 # driver parity: ideal scheme, simulated == sharded (single host)
 # ---------------------------------------------------------------------------
