@@ -1,0 +1,88 @@
+"""CI benchmark regression gate: fail on >RATIO x slowdown vs a baseline.
+
+Usage:
+    python benchmarks/check_regression.py BASELINE.json FRESH.json
+
+Compares a freshly generated ``BENCH_kernels.json`` / ``BENCH_sweeps.json``
+against the committed baseline and exits non-zero if any comparable timing
+regressed by more than ``BENCH_REGRESSION_RATIO`` (default 2.0 — CI runners
+are noisy, so the gate only catches step-change regressions, not drift).
+The file kind is auto-detected: a kernels file has an ``entries`` list keyed
+by (size, op, path); a sweeps file has flat ``*_us_per_round`` numbers.
+Speed-ups and new entries are reported but never fail the gate, and
+compile-dominated timings (``UNGATED``) are excluded from gating entirely —
+XLA trace+compile wall-clock varies across machines far beyond runner noise.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RATIO = float(os.environ.get("BENCH_REGRESSION_RATIO", "2.0"))
+
+
+def kernel_timings(doc: dict) -> dict:
+    return {(e["size"], e["op"], e["path"]): e["us_per_call"] for e in doc["entries"]}
+
+
+# compile-dominated timings are machine/cache-dependent far beyond runner
+# noise (XLA trace+compile wall-clock), so they are reported but never gated
+UNGATED = ("compiled_cold_us_per_round",)
+
+
+def sweep_timings(doc: dict) -> dict:
+    return {
+        k: v
+        for k, v in doc.items()
+        if k.endswith("_us_per_round")
+        and k not in UNGATED
+        and isinstance(v, (int, float))
+    }
+
+
+def compare(baseline: dict, fresh: dict) -> int:
+    if "entries" in baseline:
+        base_t, fresh_t = kernel_timings(baseline), kernel_timings(fresh)
+    else:
+        base_t, fresh_t = sweep_timings(baseline), sweep_timings(fresh)
+    failures = 0
+    for key in sorted(base_t, key=str):
+        if key not in fresh_t:
+            print(f"  MISSING  {key}: present in baseline, absent in fresh")
+            failures += 1
+            continue
+        b, f = base_t[key], fresh_t[key]
+        ratio = f / b if b > 0 else float("inf")
+        tag = "ok"
+        if ratio > RATIO:
+            tag = "REGRESSION"
+            failures += 1
+        elif ratio < 1 / RATIO:
+            tag = "speedup"
+        print(f"  {tag:10s} {key}: {b:.1f} -> {f:.1f} us ({ratio:.2f}x)")
+    for key in sorted(set(fresh_t) - set(base_t), key=str):
+        print(f"  new        {key}: {fresh_t[key]:.1f} us (no baseline)")
+    return failures
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as fh:
+        baseline = json.load(fh)
+    with open(argv[2]) as fh:
+        fresh = json.load(fh)
+    print(f"benchmark regression gate: threshold {RATIO}x ({argv[1]} vs {argv[2]})")
+    failures = compare(baseline, fresh)
+    if failures:
+        print(f"FAILED: {failures} timing(s) regressed beyond {RATIO}x")
+        return 1
+    print("ok: no timing regressed beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

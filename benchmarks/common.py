@@ -24,8 +24,6 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.configs.base import OTAConfig
 from repro.core.schemes import PAPER_SCHEMES, SCHEME_REGISTRY  # noqa: F401
 from repro.data.synthetic import federated_split, make_classification

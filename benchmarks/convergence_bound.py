@@ -1,6 +1,4 @@
 """Theorem 1: evaluate the Pr{E_T} bound terms for the paper's setting."""
-import numpy as np
-
 from repro.core import convergence as cv
 
 

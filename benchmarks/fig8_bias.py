@@ -10,7 +10,7 @@ column is final accuracy, and the ``fig8_rel`` rows report accuracy
 *retention* relative to the same scheme's near-IID run — A-DSGD's
 retention should dominate D-DSGD's as beta decreases.
 """
-from benchmarks.common import SCALE, dataset, emit, sweep_series
+from benchmarks.common import dataset, emit, sweep_series
 
 #: near-IID anchor first; decreasing beta = increasing label skew
 BETAS = (100.0, 1.0, 0.25)

@@ -19,8 +19,6 @@ import json
 import os
 from typing import Dict, List, Optional
 
-import numpy as np
-
 from repro.configs import INPUT_SHAPES, active_param_count, get_config, ota_overrides
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configs
@@ -187,6 +187,15 @@ class OTAConfig:
     # spelling — it promotes scheme "a_dsgd" to "a_dsgd_fading" in get_scheme.
     fading: str = "none"           # none | rayleigh
     fading_threshold: float = 0.3
+    # channel-model axis (repro.core.fading): how gains evolve over rounds
+    # and what the transmitters know about them.  fading_process selects the
+    # traced program structure (static axis); rho / csi_err_var enter the
+    # round as data, so they are vmappable sweep axes (docs/DESIGN.md §8).
+    fading_process: str = "iid"    # static | iid | gauss_markov
+    fading_rho: float = 0.9        # gauss_markov AR(1) correlation
+    fading_window: int = 64        # gauss_markov moving-average window W
+    csi_err_var: float = 0.0       # CSI estimate error variance (a_dsgd_csi_err)
+    ps_antennas: int = 32          # K PS receive antennas (a_dsgd_blind)
 
     def s_for(self, d: int) -> int:
         return max(2, int(self.s_frac * d))

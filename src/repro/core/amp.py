@@ -20,8 +20,6 @@ single-launch Pallas kernel (kernels/amp_fused.py, ``use_kernel=True``).
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

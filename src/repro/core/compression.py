@@ -7,7 +7,6 @@ flavours: exact (lax.top_k — paper-scale) and sampled-quantile threshold
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

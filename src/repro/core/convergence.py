@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 
 def lambda_val(d: int, k: int) -> float:

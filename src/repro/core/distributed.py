@@ -25,7 +25,7 @@ through an SMEM operand, so PS and devices stay consistent by construction.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,7 +114,9 @@ def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
     channel AWGN sigma^2), adds AWGN once per channel slice when the scheme
     is analog, and calls ``decode_slice`` on the observation.
     """
-    from repro.core.schemes import device_fading, shard_info
+    from repro.core.schemes import (
+        channel_amp, round_sigma2, sharded_channel_draw, shard_info,
+    )
     if ctx.key_salt:
         key = jax.random.fold_in(key, ctx.key_salt)
     g_slice = g_slice.astype(jnp.float32)
@@ -125,16 +127,18 @@ def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
             axis_index_groups=[list(g) for g in ctx.groups]) / group_size
 
     if scheme.analog:
-        # per-device fading draw (same h on every shard of a device-replica:
-        # the key is folded with the device index, not the shard index)
-        p_factor, active = device_fading(scheme, key, ctx)
-        ctx = ctx.with_p_factor(p_factor)
+        # per-device channel draw (same h on every shard of a device-replica:
+        # the full-M realisation is evaluated from the shared round key and
+        # indexed by the device row, never by the shard index)
+        draw = sharded_channel_draw(scheme, key, step, ctx)
+        ctx = ctx.with_p_factor(draw.p_factor)
     frame, new_delta, metrics = scheme.encode_slice(
         g_slice, delta_slice, step, key, ctx)
     if scheme.analog:
-        frame = {k: (v * active.astype(v.dtype) if v is not None else None)
+        amp = channel_amp(draw)
+        frame = {k: (v * amp.astype(v.dtype) if v is not None else None)
                  for k, v in frame.items()}
-        new_delta = jnp.where(active, new_delta,
+        new_delta = jnp.where(draw.active, new_delta,
                               scheme.silent_state(g_slice, delta_slice,
                                                   new_delta))
 
@@ -154,14 +158,13 @@ def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
         if y_slots is not None:
             y_slots = y_slots / group_size
     if scheme.analog:
+        sigma2 = round_sigma2(scheme, draw)
         shard_idx, n_shards = shard_info(ctx.shard_axes)
         body_key = jax.random.fold_in(key, shard_idx.astype(jnp.int32))
-        y_body = y_body + channel.awgn(body_key, y_body.shape,
-                                       scheme.cfg.sigma2)
+        y_body = y_body + channel.awgn(body_key, y_body.shape, sigma2)
         if y_slots is not None:
             slot_key = jax.random.fold_in(key, n_shards + 7)
-            y_slots = y_slots + channel.awgn(slot_key, y_slots.shape,
-                                            scheme.cfg.sigma2)
+            y_slots = y_slots + channel.awgn(slot_key, y_slots.shape, sigma2)
 
     ghat_slice = scheme.decode_slice({"body": y_body, "slots": y_slots},
                                      step, ctx)

@@ -1,0 +1,226 @@
+"""Channel-model subsystem: fading processes + CSI models as a pluggable axis.
+
+The paper's follow-ups extend over-the-air DSGD from the AWGN MAC to fading
+MACs: *Federated Learning over Wireless Fading Channels* (Amiri & Gunduz,
+arXiv:1907.09769) keeps CSI at the transmitters and truncation-inverts the
+fade, and *Collaborative Machine Learning at the Wireless Edge with Blind
+Transmitters* (Amiri, Duman & Gunduz, arXiv:1907.03909) drops transmitter
+CSI entirely and recovers alignment at a multi-antenna PS.  This module
+factors the *channel* out of the scheme classes so the two axes compose:
+
+* **fading process** — how the complex gains ``h_m(t)`` evolve over rounds:
+
+  - ``static``       block-flat: one CN(0,1) draw per run, constant in t
+  - ``iid``          a fresh CN(0,1) draw every round (the default — the
+                     behaviour of the pre-existing ``a_dsgd_fading`` scheme)
+  - ``gauss_markov`` time-correlated: the stationary AR(1) process
+                     ``h_t = rho h_{t-1} + sqrt(1-rho^2) w_t`` realised as a
+                     windowed moving average (see :func:`process_gains`), so
+                     ``h_t`` is a pure function of ``(seed, t)`` — no carried
+                     state, which is what lets compiled sweep runs stay one
+                     ``jit(lax.scan)`` and lets grids vmap over ``rho``.
+
+* **CSI model** — what the transmitter knows about its gain:
+
+  - ``perfect``  the device sees ``h_m`` exactly (1907.09769 §III)
+  - ``noisy``    the device sees an MMSE-style estimate
+                 ``h_hat = h + e``, ``e ~ CN(0, csi_err_var)``
+  - ``none``     no CSI at the device (1907.03909): plain power-scaled
+                 superposition; the PS recovers coherence by combining over
+                 K antennas (channel hardening — see
+                 :func:`blind_combiner_stats`)
+
+Everything here is a pure function of ``(keys, step)``: every draw is
+reproducible from the round key and/or the run-level ``fading_key``, nothing
+carries state across rounds, and all the "data-like" parameters
+(``csi_err_var``, ``fading_threshold``, ``fading_rho``) enter as traced
+multiplies/compares, so they ride the compiled sweep engine's vmapped axes
+(docs/DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: recognised fading processes / CSI models (validated by spec_from_cfg)
+PROCESSES = ("static", "iid", "gauss_markov")
+CSI_MODELS = ("perfect", "noisy", "none")
+
+#: salt decorrelating the run-level fading stream from every other consumer
+#: of OTAConfig.seed (projector seeds, data splits)
+FADING_SEED_SALT = 0x0FAD
+
+#: offset keeping ``step - i`` folds positive for any practical horizon
+_STEP_OFFSET = 1 << 20
+
+
+@dataclass(frozen=True)
+class FadingSpec:
+    """Static description of the channel model (shape-/trace-defining bits).
+
+    The *values* of ``rho`` / ``csi_err_var`` / ``threshold`` live on the
+    scheme object as traced-friendly scalars (swappable per grid point via
+    ``Scheme.with_overrides``); this spec only pins what changes the traced
+    program structure: which process/CSI branch is generated, the MA window,
+    and the PS antenna count.
+    """
+
+    process: str = "iid"  # static | iid | gauss_markov
+    csi: str = "perfect"  # perfect | noisy | none
+    window: int = 64  # gauss_markov MA window W
+    ps_antennas: int = 32  # K receive antennas (blind PS combining)
+
+
+def spec_from_cfg(cfg) -> FadingSpec:
+    """Build the spec from an OTAConfig, validating the names."""
+    if cfg.fading_process not in PROCESSES:
+        raise ValueError(
+            f"unknown fading_process {cfg.fading_process!r}; known: {PROCESSES}"
+        )
+    return FadingSpec(
+        process=cfg.fading_process,
+        window=cfg.fading_window,
+        ps_antennas=cfg.ps_antennas,
+    )
+
+
+def fading_base_key(seed: int) -> jnp.ndarray:
+    """Run-level key anchoring the static / gauss_markov gain streams.
+
+    Derived from ``OTAConfig.seed`` — the correlated-fading *realisation* is
+    a property of the run configuration, not of the per-round key stream, so
+    a ``seed`` sweep axis (which shifts the round keys) holds the fading
+    sample path fixed across replicas: common random numbers for paired
+    comparisons.
+    """
+    return jax.random.PRNGKey(seed ^ FADING_SEED_SALT)
+
+
+def complex_normals(key: jnp.ndarray, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(re, im) of m i.i.d. CN(0,1) draws — the exact draw layout of the
+    legacy ``channel.rayleigh_gains`` (bitwise-pinned by the goldens)."""
+    re, im = jax.random.normal(key, (2, m)) / jnp.sqrt(2.0)
+    return re, im
+
+
+def magnitude(re: jnp.ndarray, im: jnp.ndarray) -> jnp.ndarray:
+    """|h| computed exactly as ``channel.rayleigh_gains`` does."""
+    return jnp.sqrt(re * re + im * im)
+
+
+def process_gains(
+    spec: FadingSpec,
+    fkey: jnp.ndarray,
+    round_key: jnp.ndarray,
+    step,
+    m: int,
+    rho=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Complex gains (re, im), each (m,), for one round — pure in (keys, t).
+
+    ``iid`` draws from the (already salted) per-round ``round_key`` — for
+    the default process this is bitwise the pre-existing ``a_dsgd_fading``
+    draw.  ``static`` draws from the run-level ``fkey`` only, so every round
+    sees the same block-flat realisation.  ``gauss_markov`` realises the
+    stationary AR(1) Gaussian process through its moving-average expansion
+
+        h_t = sum_{i>=0} c_i w_{t-i},   c_i ∝ rho^i,
+
+    truncated at ``spec.window`` terms and renormalised to unit variance:
+    the innovations ``w_j`` come from ``fold_in(fkey, j)``, so ``h_t`` is a
+    pure function of ``(fkey, t)`` with autocorrelation ``rho^|dt|`` (up to
+    the truncation factor ``(1-rho^{2(W-dt)})/(1-rho^{2W})``).  Statelessness
+    is the point: the same expression evaluates inside a compiled scan, in
+    the looped reference, and under vmap — and ``rho`` enters only as a
+    traced weight vector, so it can ride a vmapped sweep axis.
+    """
+    if spec.process == "iid":
+        return complex_normals(round_key, m)
+    if spec.process == "static":
+        return complex_normals(fkey, m)
+    # gauss_markov
+    w = spec.window
+    rho = jnp.asarray(0.9 if rho is None else rho, jnp.float32)
+    idx = jnp.arange(w, dtype=jnp.float32)
+    c = rho**idx
+    c = c / jnp.sqrt(jnp.sum(c * c))
+
+    def draw(i):
+        k = jax.random.fold_in(fkey, jnp.asarray(step, jnp.int32) - i + _STEP_OFFSET)
+        return jnp.stack(complex_normals(k, m))  # (2, m)
+
+    draws = jax.vmap(draw)(jnp.arange(w, dtype=jnp.int32))  # (W, 2, m)
+    h = jnp.tensordot(c, draws, axes=1)  # (2, m)
+    return h[0], h[1]
+
+
+def csi_estimate(
+    re: jnp.ndarray,
+    im: jnp.ndarray,
+    key: jnp.ndarray,
+    err_var,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Noisy CSI: ``h_hat = h + e``, ``e ~ CN(0, err_var)``.
+
+    ``err_var`` is a traced scalar (a vmappable sweep axis); at exactly 0 the
+    additive error is ``0.0 * e`` — IEEE-exact, so ``h_hat`` is bitwise ``h``
+    and the csi-err scheme degrades to perfect-CSI truncated inversion with
+    no special-casing (pinned by the goldens).
+    """
+    m = re.shape[0]
+    e_re, e_im = complex_normals(key, m)
+    s = jnp.sqrt(jnp.asarray(err_var, jnp.float32))
+    return re + s * e_re, im + s * e_im
+
+
+def misalignment_gain(re, im, est_re, est_im, err_var) -> jnp.ndarray:
+    """Effective real gain of estimate-driven channel inversion.
+
+    A device that pre-inverts with its *estimate* transmits ``x / h_hat``;
+    the channel applies the *true* ``h``, so the coherent (in-phase)
+    component arrives scaled by ``Re(h / h_hat) = Re(h conj(h_hat)) /
+    |h_hat|^2`` — under-unity on average, and noisier as the estimation
+    error grows (the quadrature leakage ``Im(h/h_hat)`` is orthogonal to the
+    real frame and drops out of coherent detection).  At ``err_var == 0``
+    numerator and denominator are the *same expression*, so the ratio is
+    exactly 1.0 and the fading-scheme fast path is preserved bitwise (the
+    explicit ``where`` keeps that exactness even when ``err_var`` is a
+    traced zero inside a sweep grid).
+    """
+    num = re * est_re + im * est_im
+    den = est_re * est_re + est_im * est_im
+    g = num / jnp.maximum(den, 1e-12)
+    return jnp.where(jnp.asarray(err_var, jnp.float32) > 0.0, g, jnp.ones_like(g))
+
+
+def blind_combiner_stats(
+    re: jnp.ndarray,
+    im: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """PS-side combining statistics for blind transmitters (1907.03909).
+
+    ``re, im``: (m, K) per-device/per-antenna true gains.  The K-antenna PS
+    knows its receive CSI and combines the antenna observations with the
+    conjugate of the *superposed* channel ``f_k = sum_m h_{m,k}`` — the only
+    combiner available post-superposition — normalised by ``K E|h|^2 = K``:
+
+        y_comb = (1/K) sum_k conj(f_k) y_k
+               = sum_m g_m x_m + (1/K) sum_k conj(f_k) z_k
+
+    Returns ``(gain, noise_scale)``: ``gain[m] = Re(g_m)`` — the per-device
+    effective real gain, ``1 + O(sqrt(M/K))`` by channel hardening — and the
+    scalar ``noise_scale = sum_k |f_k|^2 / K^2`` multiplying the AWGN
+    variance (``~ M/K`` in expectation).  As K grows both converge (gains
+    to 1, noise to 0): the blind MAC hardens into a noiseless ideal link,
+    which is the paper's asymptotic result.
+    """
+    k = re.shape[1]
+    f_re = jnp.sum(re, axis=0)  # (K,)
+    f_im = jnp.sum(im, axis=0)
+    gain = (re @ f_re + im @ f_im) / k  # Re(conj(f) h), summed over antennas
+    noise_scale = jnp.sum(f_re * f_re + f_im * f_im) / (k * k)
+    return gain, noise_scale

@@ -30,7 +30,13 @@ name dispatch):
 
 Topology facts (device axes, shard axes, group structure, per-device fading
 power factor, perf knobs) travel in an explicit :class:`MACContext` so the
-same scheme object serves all three drivers.
+same scheme object serves all three drivers.  The *channel* is its own
+pluggable axis (:mod:`repro.core.fading`): per round the drivers ask the
+scheme for a :class:`ChannelDraw` — received-power factor, transmit set,
+frame gain, noise scale — so fading processes (static / iid / gauss_markov)
+and CSI models (perfect / noisy estimate / none) compose with any analog
+scheme; see ``ADSGDFadingScheme`` / ``ADSGDCSIErrScheme`` /
+``ADSGDBlindScheme`` and docs/DESIGN.md §8.
 
 Registering a new scheme takes ~10 lines::
 
@@ -50,13 +56,13 @@ import copy
 import dataclasses
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Any, Dict, Optional, Sequence, Tuple, Type
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OTAConfig
-from repro.core import channel, compression, power
+from repro.core import channel, compression, fading, power
 from repro.core.amp import amp_decode
 from repro.core.projection import DenseProjector, make_projector
 from repro.kernels import ops, ref
@@ -81,6 +87,7 @@ class MACContext:
     shard_axes: Tuple[str, ...] = ()             # manual axes sharding d
     groups: Optional[Tuple[Tuple[int, ...], ...]] = None   # edge-site groups
     fading: str = "none"                         # descriptive channel model
+    csi: str = "perfect"                         # descriptive CSI model
     p_factor: Any = 1.0                          # received-power scale (traced)
     # slice-driver geometry / perf knobs (defaults = paper-faithful)
     d_pad: int = 0                               # global padded dimension
@@ -116,6 +123,25 @@ def shard_info(shard_axes: Sequence[str]):
         shard_idx = shard_idx * sz + jax.lax.axis_index(ax).astype(jnp.uint32)
         n_shards *= sz
     return shard_idx, n_shards
+
+
+class ChannelDraw(NamedTuple):
+    """One round's channel realisation, as seen by a driver.
+
+    ``p_factor``/``active`` are the pre-existing truncated-inversion pair
+    (received-power scale inside ``encode``; transmit-set membership).  The
+    two optional fields carry what imperfect-CSI channels add on top:
+    ``gain`` is a per-device amplitude applied to the *encoded frame* (the
+    misalignment ``Re(h/h_hat)`` under estimated inversion, the combiner
+    gain under blind transmission — ``None`` means exactly 1 and preserves
+    the legacy bitwise path), and ``noise_scale`` is a scalar multiplier on
+    the AWGN variance (the blind PS combiner's noise enhancement; ``None``
+    means exactly 1).
+    """
+    p_factor: jnp.ndarray                        # (m,) received-power factor
+    active: jnp.ndarray                          # (m,) bool transmit set
+    gain: Optional[jnp.ndarray] = None           # (m,) frame amplitude
+    noise_scale: Optional[jnp.ndarray] = None    # scalar sigma^2 multiplier
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +193,8 @@ class Scheme:
 
     name: str = "?"
     analog: bool = False
+    #: descriptive CSI model of the scheme's channel (MACContext.csi)
+    csi: str = "perfect"
 
     def __init__(self, cfg: OTAConfig, d: int, m: int):
         self.cfg = cfg
@@ -175,6 +203,14 @@ class Scheme:
         self._p_np = power.schedule_array(cfg.total_steps, cfg.p_avg,
                                           cfg.power_schedule)
         self.p_sched = jnp.asarray(self._p_np, jnp.float32)
+        # channel-model scalars: these enter the round as data (compares /
+        # multiplies), so the sweep engine can swap them per grid point via
+        # with_overrides and vmap whole fading grids on one trace
+        self.fading_threshold = jnp.float32(cfg.fading_threshold)
+        self.csi_err_var = jnp.float32(cfg.csi_err_var)
+        self.fading_rho = jnp.float32(cfg.fading_rho)
+        #: run-level key anchoring the static / gauss_markov gain streams
+        self.fading_key = fading.fading_base_key(cfg.seed)
 
     # ------------------------------------------------------------- state
     def init_state(self, d: Optional[int] = None) -> jnp.ndarray:
@@ -210,9 +246,39 @@ class Scheme:
         return p * jnp.asarray(p_factor, jnp.float32)
 
     # ----------------------------------------------------- fading hooks
+    @cached_property
+    def fading_spec(self) -> fading.FadingSpec:
+        """Static channel-model description (process / window / antennas),
+        tagged with this scheme's CSI model."""
+        return dataclasses.replace(fading.spec_from_cfg(self.cfg),
+                                   csi=self.csi)
+
+    def gains(self, key: jnp.ndarray, step, m: int):
+        """Complex gains (re, im) for this round under cfg.fading_process —
+        pure in (key, step), so it evaluates identically inside a compiled
+        scan, in the looped reference, and under vmap."""
+        return fading.process_gains(self.fading_spec, self.fading_key, key,
+                                    step, m, rho=self.fading_rho)
+
     def device_factors(self, key: jnp.ndarray, m: int):
         """(received-power factor, participation mask) per device."""
         return jnp.ones((m,)), jnp.ones((m,), bool)
+
+    def channel_draw(self, key: jnp.ndarray, step, m: int,
+                     mask=None) -> ChannelDraw:
+        """One round's channel realisation (the driver-facing hook).
+
+        The base implementation wraps the legacy :meth:`device_factors`
+        pair; channel-aware schemes override this to add CSI error or
+        PS-side combining.  ``key`` is the fading-salted round key
+        (``fold_in(round_key, 2)``); ``step`` feeds the time-correlated
+        processes.  ``mask`` (optional, (m,) bool) marks which of the m
+        padded devices physically exist — per-device draws can ignore it
+        (masked frames are zeroed by the driver anyway), but draws that
+        couple devices (the blind PS combiner) must exclude phantom rows.
+        """
+        p_factor, active = self.device_factors(key, m)
+        return ChannelDraw(p_factor, active)
 
     def silent_state(self, g: jnp.ndarray, state: jnp.ndarray,
                      new_state: jnp.ndarray) -> jnp.ndarray:
@@ -447,24 +513,101 @@ class ADSGDScheme(Scheme):
 
 
 # ---------------------------------------------------------------------------
-# A-DSGD over a Rayleigh-fading MAC (follow-up [34]): truncated inversion
+# A-DSGD over fading MACs (follow-ups 1907.09769 / 1907.03909): truncated
+# inversion under perfect / estimated CSI, and CSI-free blind transmission
 # ---------------------------------------------------------------------------
 
 
 @register_scheme("a_dsgd_fading")
 class ADSGDFadingScheme(ADSGDScheme):
-    """A-DSGD under block-flat Rayleigh fading with truncated channel
-    inversion: devices below the fade threshold stay silent this round
-    (their whole update accumulates into the error state); the rest
-    pre-invert, so the usable received power becomes ``P_t * h_m^2``."""
+    """A-DSGD under Rayleigh fading with truncated channel inversion
+    (perfect CSI, arXiv:1907.09769): devices below the fade threshold stay
+    silent this round (their whole update accumulates into the error
+    state); the rest pre-invert, so the usable received power becomes
+    ``P_t * h_m^2``.  The gain *process* (``cfg.fading_process``: block-flat
+    ``static``, per-round ``iid``, time-correlated ``gauss_markov``) comes
+    from :mod:`repro.core.fading`; ``iid`` is bitwise the original
+    per-round Rayleigh draw."""
 
     def device_factors(self, key, m):
+        # legacy spelling of the iid draw — kept because it is the module
+        # docstring's ~10-line extension example; channel_draw generalises
+        # it across fading processes
         h = channel.rayleigh_gains(key, m)
-        return channel.truncated_inversion_power(h, self.cfg.fading_threshold)
+        return channel.truncated_inversion_power(h, self.fading_threshold)
+
+    def channel_draw(self, key, step, m, mask=None):
+        re, im = self.gains(key, step, m)
+        h = fading.magnitude(re, im)
+        p_factor, active = channel.truncated_inversion_power(
+            h, self.fading_threshold)
+        return ChannelDraw(p_factor, active)
 
     def silent_state(self, g, state, new_state):
         # a silent (deep-fade) device accumulates its whole update
         return (g + state).astype(new_state.dtype)
+
+
+@register_scheme("a_dsgd_csi_err")
+class ADSGDCSIErrScheme(ADSGDFadingScheme):
+    """Truncated inversion driven by a *noisy* CSI estimate.
+
+    The device only sees ``h_hat = h + e``, ``e ~ CN(0, csi_err_var)``
+    (an MMSE-style estimation error): it makes its truncation decision and
+    pre-inverts with ``h_hat``, so the frame arrives scaled by the
+    misalignment ``Re(h / h_hat)`` — residual fading that survives decode —
+    while the power budget follows ``|h_hat|^2``.  With ``csi_err_var == 0``
+    every quantity degrades bitwise to :class:`ADSGDFadingScheme` (pinned by
+    the ``a_dsgd_csi_err0`` golden).
+    """
+
+    csi = "noisy"
+
+    def channel_draw(self, key, step, m, mask=None):
+        re, im = self.gains(key, step, m)
+        est_re, est_im = fading.csi_estimate(
+            re, im, jax.random.fold_in(key, 3), self.csi_err_var)
+        h_est = fading.magnitude(est_re, est_im)
+        p_factor, active = channel.truncated_inversion_power(
+            h_est, self.fading_threshold)
+        gain = fading.misalignment_gain(re, im, est_re, est_im,
+                                        self.csi_err_var)
+        return ChannelDraw(p_factor, active, gain=gain)
+
+
+@register_scheme("a_dsgd_blind")
+class ADSGDBlindScheme(ADSGDScheme):
+    """A-DSGD with blind transmitters (no CSIT, arXiv:1907.03909).
+
+    Devices cannot invert a gain they do not know: every device transmits
+    its plain power-scaled frame (full transmit set, ``p_factor = 1``), and
+    alignment is recovered at the PS, whose K antennas combine the
+    superposed observations against the known receive CSI
+    (:func:`repro.core.fading.blind_combiner_stats`).  Each frame then
+    carries a per-device effective gain ``1 + O(sqrt(M/K))`` and the AWGN
+    variance is enhanced by ``~ M/K`` — both vanish as K grows (channel
+    hardening), which is the paper's asymptotic result.  The decode is
+    untouched: the analog scale slot arrives as ``sum_m g_m sqrt(alpha_m)``
+    and absorbs the combiner's average gain exactly like the fading
+    alpha-spread it was designed for.
+    """
+
+    csi = "none"
+
+    def channel_draw(self, key, step, m, mask=None):
+        k_ant = self.fading_spec.ps_antennas
+        re, im = self.gains(key, step, m * k_ant)
+        re, im = re.reshape(m, k_ant), im.reshape(m, k_ant)
+        if mask is not None:
+            # phantom (masked-out) devices do not exist physically: their
+            # channel rows must not enter the PS combiner f_k = sum_m h_mk,
+            # so an m_active sweep sees the m_eff-transmitter combiner
+            # statistics, not the padded cohort's
+            live = mask.astype(re.dtype)[:, None]
+            re, im = re * live, im * live
+        gain, noise_scale = fading.blind_combiner_stats(re, im)
+        return ChannelDraw(jnp.ones((m,)), jnp.ones((m,), bool),
+                           gain=gain, noise_scale=noise_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -554,6 +697,30 @@ def __getattr__(name: str):
 # ---------------------------------------------------------------------------
 
 
+def channel_amp(draw: ChannelDraw, dtype=jnp.float32) -> jnp.ndarray:
+    """Per-device amplitude of the received frame: the transmit mask, times
+    the channel gain when the draw carries one.  ``gain=None`` means exactly
+    1, so the expression stays the 0/1 mask and the legacy path is bitwise
+    (multiplying by the cast mask is IEEE-identical to multiplying by the
+    bool — promotion performs the same cast)."""
+    active = draw.active.astype(dtype)
+    return active if draw.gain is None else draw.gain * active
+
+
+def apply_channel_gain(frames: jnp.ndarray, draw: ChannelDraw) -> jnp.ndarray:
+    """Silence inactive devices and apply the per-device channel gain to a
+    stacked (m, s) frame batch (the simulated/masked drivers)."""
+    return frames * channel_amp(draw, frames.dtype)[..., None]
+
+
+def round_sigma2(scheme: Scheme, draw: ChannelDraw):
+    """This round's AWGN variance: cfg.sigma2, under the channel's traced
+    noise enhancement when the draw carries one (blind PS combining)."""
+    if draw.noise_scale is None:
+        return scheme.cfg.sigma2
+    return scheme.cfg.sigma2 * draw.noise_scale
+
+
 def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
                     step, key: jnp.ndarray,
                     ctx: Optional[MACContext] = None):
@@ -562,36 +729,55 @@ def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
     (plus AWGN for analog schemes)."""
     m = grads.shape[0]
     if ctx is None:
-        ctx = MACContext(m=scheme.m, fading=scheme.cfg.fading)
+        ctx = MACContext(m=scheme.m, fading=scheme.cfg.fading,
+                         csi=scheme.csi)
     dev_keys = jax.random.split(jax.random.fold_in(key, 1), m)
-    p_fac, active = scheme.device_factors(jax.random.fold_in(key, 2), m)
+    draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m)
+    active = draw.active
     frames, new_deltas, metrics = jax.vmap(
         lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
                                             ctx.with_p_factor(pf)))(
-            grads, deltas, dev_keys, p_fac)
+            grads, deltas, dev_keys, draw.p_factor)
     if scheme.analog:
-        frames = frames * active[:, None]
+        frames = apply_channel_gain(frames, draw)
         new_deltas = jnp.where(active[:, None], new_deltas,
                                scheme.silent_state(grads, deltas, new_deltas))
         y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
-                            scheme.cfg.sigma2)
+                            round_sigma2(scheme, draw))
     else:
         y = jnp.sum(frames, axis=0)
     ghat = scheme.decode(y, step, ctx)
     metrics = {k: jnp.mean(v) for k, v in metrics.items()}
     metrics["active_frac"] = jnp.mean(active.astype(jnp.float32))
+    if draw.gain is not None:
+        metrics["chan_gain"] = jnp.mean(draw.gain)
+    if draw.noise_scale is not None:
+        metrics["noise_scale"] = draw.noise_scale
     return ghat, new_deltas, metrics
 
 
-def device_fading(scheme: Scheme, key: jnp.ndarray, ctx: MACContext):
-    """Per-device fading draw inside a shard_map: every manual device folds
-    its device index into the key (salt 2, matching round_simulated) and
-    draws its own (p_factor, active) from the scheme's fading hook."""
+def sharded_channel_draw(scheme: Scheme, key: jnp.ndarray, step,
+                         ctx: MACContext) -> ChannelDraw:
+    """This device's channel realisation inside a shard_map.
+
+    Every manual device evaluates the *full-M* draw from the shared round
+    key (salt 2, matching :func:`round_simulated`) and takes its own row —
+    the realisation is common knowledge across devices, which is what the
+    correlated processes and the blind PS combiner (whose per-device gain
+    depends on everyone's channel) require, and the per-scalar cost of the
+    M-row draw is noise next to the d-sized frame math.
+    """
     dev_idx, _ = shard_info(ctx.device_axes)
-    dev_key = jax.random.fold_in(jax.random.fold_in(key, 2),
-                                 dev_idx.astype(jnp.int32))
-    p_fac, active = scheme.device_factors(dev_key, 1)
-    return p_fac[0], active[0]
+    draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, ctx.m)
+
+    def take(v):
+        if v is None:
+            return None
+        return jax.lax.dynamic_index_in_dim(v, dev_idx.astype(jnp.int32),
+                                            keepdims=False)
+
+    return ChannelDraw(take(draw.p_factor), take(draw.active),
+                       gain=take(draw.gain), noise_scale=draw.noise_scale)
 
 
 def round_sharded(scheme: Scheme, g_local: jnp.ndarray,
@@ -610,16 +796,16 @@ def round_sharded(scheme: Scheme, g_local: jnp.ndarray,
                                axis_index_groups=[list(g) for g in ctx.groups])
         g_local = g_local / group_size
     # distinct salts for the three RNG consumers (matching round_simulated):
-    # fold 1 -> device-side encode randomness, fold 2 -> the fading draw,
+    # fold 1 -> device-side encode randomness, fold 2 -> the channel draw,
     # fold 0 -> the channel AWGN
     if scheme.analog:
-        p_factor, active = device_fading(scheme, key, ctx)
-        ctx = ctx.with_p_factor(p_factor)
+        draw = sharded_channel_draw(scheme, key, step, ctx)
+        ctx = ctx.with_p_factor(draw.p_factor)
     frame, new_delta, metrics = scheme.encode(
         g_local, delta_local, step, jax.random.fold_in(key, 1), ctx)
     if scheme.analog:
-        frame = frame * active.astype(frame.dtype)
-        new_delta = jnp.where(active, new_delta,
+        frame = frame * channel_amp(draw, frame.dtype)
+        new_delta = jnp.where(draw.active, new_delta,
                               scheme.silent_state(g_local, delta_local,
                                                   new_delta))
     y = frame
@@ -629,6 +815,6 @@ def round_sharded(scheme: Scheme, g_local: jnp.ndarray,
         y = y / group_size
     if scheme.analog:
         y = y + channel.awgn(jax.random.fold_in(key, 0), y.shape,
-                             scheme.cfg.sigma2, y.dtype)
+                             round_sigma2(scheme, draw), y.dtype)
     ghat = scheme.decode(y, step, ctx)
     return ghat, new_delta, metrics

@@ -35,7 +35,7 @@ compiled engine runs) and deterministic given ``seed``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

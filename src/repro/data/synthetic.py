@@ -13,12 +13,9 @@ Two pipelines:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 
 # ---------------------------------------------------------------------------

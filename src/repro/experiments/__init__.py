@@ -12,5 +12,5 @@ from repro.experiments.engine import (  # noqa: F401
     round_masked, run_compiled,
 )
 from repro.experiments.sweep import (  # noqa: F401
-    VMAP_AXES, SweepResult, run_sweep,
+    SCALAR_VMAP_AXES, VMAP_AXES, SweepResult, run_sweep,
 )

@@ -22,8 +22,8 @@ not reshaping, is the only way to put M on a vmap axis).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List
 
 import jax
 import jax.flatten_util
@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import OTAConfig
 from repro.core import channel
+from repro.core import schemes as schemes_mod
 from repro.core.schemes import MACContext, Scheme, get_scheme, round_simulated
 from repro.optim.optim import Optimizer
 from repro.train.paper_repro import (
@@ -105,18 +106,24 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
     m_eff = jnp.sum(mask.astype(jnp.float32))
     ctx = dataclasses.replace(ctx, m=m_eff)
     dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_pad)
-    p_fac, active = scheme.device_factors(jax.random.fold_in(key, 2), m_pad)
+    # device-coupled draws (the blind PS combiner) must not see the padded
+    # phantom devices' channels; an all-ones mask multiplies rows by 1.0,
+    # so the unmasked equivalence below still holds bitwise
+    draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m_pad,
+                               mask=mask_b)
+    active = draw.active
     frames, new_deltas, metrics = jax.vmap(
         lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
                                             ctx.with_p_factor(pf)))(
-            grads, deltas, dev_keys, p_fac)
+            grads, deltas, dev_keys, draw.p_factor)
     if scheme.analog:
         new_deltas = jnp.where(active[:, None], new_deltas,
                                scheme.silent_state(grads, deltas, new_deltas))
         active = active & mask_b
-        frames = frames * active[:, None]
+        frames = schemes_mod.apply_channel_gain(
+            frames, draw._replace(active=active))
         y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
-                            scheme.cfg.sigma2)
+                            schemes_mod.round_sigma2(scheme, draw))
     else:
         active = active & mask_b
         frames = frames * mask_b[:, None]
@@ -160,7 +167,7 @@ class CompiledExperiment:
         self.xd, self.yd = jnp.asarray(x_dev), jnp.asarray(y_dev)
         self.xt, self.yt = jnp.asarray(x_test), jnp.asarray(y_test)
         self.ctx = MACContext(
-            m=m, fading=exp.cfg.fading,
+            m=m, fading=exp.cfg.fading, csi=self.scheme.csi,
             use_kernel=exp.use_kernel or exp.cfg.use_kernel)
 
     # ------------------------------------------------------------- pieces

@@ -16,6 +16,11 @@ vmapped axes (``VMAP_AXES``):
                                            M_pad padded devices
                                            (:func:`engine.round_masked`)
 
+plus the channel-model scalars (``SCALAR_VMAP_AXES``): ``csi_err_var``,
+``fading_threshold`` and ``fading_rho`` enter the round as one traced
+scalar each (a multiply or compare inside the scheme's channel draw), so a
+whole CSI-error / truncation / correlation grid rides one vmapped program.
+
 Everything else (``scheme``, ``s_frac``, ``k_frac``, ``projection``,
 ``amp_iters``, ``sigma2``, ...) is an ``OTAConfig`` field swept statically:
 the grid is grouped by static combo, one compile per combo, and the
@@ -46,6 +51,15 @@ from repro.experiments.engine import (
 #: axes realised as vmapped per-point arrays on one trace
 VMAP_AXES = ("p_avg", "power_schedule", "seed", "m_active")
 
+#: OTAConfig fields that enter the round as a single traced scalar (a
+#: compare or multiply inside the channel draw) — vmapped like the schedule
+#: axes, but realised as a (G,) stack of per-point values swapped onto the
+#: scheme via ``with_overrides`` (the attribute of the same name, set by
+#: ``Scheme.__init__``).  docs/DESIGN.md §8 records why these three are
+#: data-like while ``fading_process`` / ``fading_window`` / ``ps_antennas``
+#: are structure-defining and stay static.
+SCALAR_VMAP_AXES = ("csi_err_var", "fading_threshold", "fading_rho")
+
 
 @dataclass
 class SweepResult:
@@ -69,10 +83,12 @@ class SweepResult:
 def _validate_axes(axes: Dict[str, Sequence], base: OTAConfig) -> None:
     cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
     for name, values in axes.items():
-        if name not in VMAP_AXES and name not in cfg_fields:
+        if (name not in VMAP_AXES and name not in SCALAR_VMAP_AXES
+                and name not in cfg_fields):
             raise KeyError(
                 f"unknown sweep axis {name!r}: vmapped axes are "
-                f"{VMAP_AXES}, static axes are OTAConfig fields")
+                f"{VMAP_AXES + SCALAR_VMAP_AXES}, static axes are "
+                "OTAConfig fields")
         if not len(list(values)):
             raise ValueError(f"sweep axis {name!r} is empty")
 
@@ -95,8 +111,9 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
     if masked and max(axes["m_active"]) > m_pad:
         raise ValueError(f"m_active values must be <= M_pad = {m_pad}")
 
-    static_names = [k for k in axes if k not in VMAP_AXES]
-    vmap_names = [k for k in axes if k in VMAP_AXES]
+    vmapped = VMAP_AXES + SCALAR_VMAP_AXES
+    static_names = [k for k in axes if k not in vmapped]
+    vmap_names = [k for k in axes if k in vmapped]
     records: List[Dict[str, Any]] = []
     t0 = time.time()
 
@@ -113,7 +130,9 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
             *[axes[k] for k in vmap_names])] if vmap_names else [{}])
 
         # --- per-point schedule arrays (host precompute) -----------------
+        scalar_names = [k for k in vmap_names if k in SCALAR_VMAP_AXES]
         p_rows, q_rows, key_rows, mask_rows = [], [], [], []
+        scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
         for point in grid:
             p_avg = point.get("p_avg", cfg.p_avg)
             sched = point.get("power_schedule", cfg.power_schedule)
@@ -128,8 +147,12 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
             if masked:
                 mask_rows.append(
                     (np.arange(m_pad) < m_eff).astype(np.float32))
+            for k in scalar_names:
+                scalar_rows[k].append(point[k])
 
         overrides = {"p_sched": jnp.asarray(np.stack(p_rows))}
+        for k in scalar_names:
+            overrides[k] = jnp.asarray(scalar_rows[k], jnp.float32)
         if digital:
             q_grid = np.stack(q_rows)
             ce.scheme.q_max = int(max(int(q_grid.max()), 1))

@@ -10,7 +10,6 @@ memory-bound at d ~ 1e9+.  tau is a scalar (prefetched to SMEM-like operand).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

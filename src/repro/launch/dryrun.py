@@ -87,7 +87,6 @@ def _collective_bytes(hlo_text: str) -> Dict[str, float]:
         if "=" not in stripped:
             continue
         lhs, _, rhs = stripped.partition("=")
-        m = re.match(r"\s*(?:\(?[\w.\-%]*\)?\s*)?([a-z\-]+)", rhs.strip())
         opname = None
         for op in ops:
             token = rhs.strip()
@@ -144,7 +143,6 @@ def dryrun_one(arch_id: str, shape_id: str, multi_pod: bool,
     if (arch_id, shape_id) in SKIPS:
         return {"skipped": SKIPS[(arch_id, shape_id)]}
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n_chips = int(np.prod(mesh.devices.shape))
     t0 = time.time()
 

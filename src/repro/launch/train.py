@@ -14,7 +14,6 @@ On a real TPU slice drop --reduced/--devices and pass --mesh 16x16.
 """
 import argparse
 import os
-import sys
 import time
 
 

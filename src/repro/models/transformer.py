@@ -10,7 +10,7 @@ Qwen2-VL consumes stub patch embeddings (prefix) and M-RoPE positions.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

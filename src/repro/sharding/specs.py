@@ -8,7 +8,7 @@ of inputs/caches shard over the data axes (handled at the call sites).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import numpy as np

@@ -13,7 +13,7 @@ the reconstructed gradient.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import jax.flatten_util

@@ -8,7 +8,7 @@ params over 'model', batch over the data axes, KV caches over
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,8 @@ def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
         lambda: model_lib.init_decode_cache(arch, batch, max_len,
                                             cache_dtype, decode_window))
     cache_sh = jax.tree.map(
-        lambda l: ns(_cache_leaf_spec(l.shape, data_axes, axis_sizes)), acache)
+        lambda lf: ns(_cache_leaf_spec(lf.shape, data_axes, axis_sizes)),
+        acache)
     tok_spec = ns(P(data_axes if len(data_axes) > 1 else data_axes[0])
                   if batch % max(int(np.prod([axis_sizes[a] for a in data_axes])), 1) == 0
                   and len(data_axes) else P())

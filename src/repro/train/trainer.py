@@ -26,7 +26,7 @@ grads), the MAC runs across pods.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.flatten_util
@@ -119,7 +119,7 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
         m=m_eff, device_axes=ota_axes, shard_axes=auto_axes,
         groups=(tuple(tuple(g) for g in groups) if groups is not None
                 else None),
-        fading=ota.fading, d_pad=d_pad,
+        fading=ota.fading, csi=scheme.csi, d_pad=d_pad,
         frame_dtype=(jnp.dtype(ota.frame_dtype)
                      if ota.frame_dtype != "float32" else None),
         shard_decode=ota.shard_decode, use_kernel=ota.use_kernel)
@@ -270,8 +270,8 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
         n = int(np.prod(leaf.shape))
         return n // model_size if sharded else n
 
-    d_sh = sum(local_size(l, s, sh) for _, l, s, sh in info if sh)
-    d_rep = sum(local_size(l, s, sh) for _, l, s, sh in info if not sh)
+    d_sh = sum(local_size(lf, s, sh) for _, lf, s, sh in info if sh)
+    d_rep = sum(local_size(lf, s, sh) for _, lf, s, sh in info if not sh)
     d_sh_pad = _pad_multiple(max(d_sh, c), c)
     d_rep_pad = _pad_multiple(max(d_rep, c), c)
     d_total = d_sh * model_size + d_rep
@@ -300,12 +300,14 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
     # each with its own power share (sum = P_t) and decorrelated RNG salt
     ctx_sh = MACContext(
         m=m_eff, device_axes=ota_axes, shard_axes=("model",),
-        groups=groups_t, fading=ota.fading, d_pad=d_sh_pad * model_size,
+        groups=groups_t, fading=ota.fading, csi=scheme.csi,
+        d_pad=d_sh_pad * model_size,
         p_scale=p_share_sh, frame_dtype=frame_dtype,
         shard_decode=ota.shard_decode, use_kernel=ota.use_kernel)
     ctx_rep = MACContext(
         m=m_eff, device_axes=ota_axes, shard_axes=(),
-        groups=groups_t, fading=ota.fading, d_pad=d_rep_pad,
+        groups=groups_t, fading=ota.fading, csi=scheme.csi,
+        d_pad=d_rep_pad,
         p_scale=1.0 - p_share_sh, key_salt=1789, frame_dtype=frame_dtype,
         shard_decode=ota.shard_decode, use_kernel=ota.use_kernel)
 
@@ -331,12 +333,13 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
     def _flatten_group(leaves):
         if not leaves:
             return jnp.zeros((0,), jnp.float32)
-        return jnp.concatenate([l.reshape(-1) for l in leaves])
+        return jnp.concatenate([lf.reshape(-1) for lf in leaves])
 
     def agg_body(grads, delta_sh, delta_rep, step, key):
         leaves = jax.tree.leaves(grads)
-        sh_leaves = [l[0] for l, (_, _, _, sh) in zip(leaves, info) if sh]
-        rep_leaves = [l[0] for l, (_, _, _, sh) in zip(leaves, info) if not sh]
+        sh_leaves = [lf[0] for lf, (_, _, _, sh) in zip(leaves, info) if sh]
+        rep_leaves = [lf[0]
+                      for lf, (_, _, _, sh) in zip(leaves, info) if not sh]
         g_sh = jnp.pad(_flatten_group(sh_leaves), (0, d_sh_pad - d_sh))
         g_rep = jnp.pad(_flatten_group(rep_leaves), (0, d_rep_pad - d_rep))
         dl_sh = delta_sh.reshape(-1)
@@ -348,8 +351,8 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
         # unflatten back into the gradient tree (local shapes)
         out, i_sh, i_rep = [], 0, 0
         p_sh, p_rep = ghat_sh[:d_sh], ghat_rep[:d_rep]
-        for l, (_, _, _, sh) in zip(leaves, info):
-            shape = l.shape[1:]
+        for lf, (_, _, _, sh) in zip(leaves, info):
+            shape = lf.shape[1:]
             n = int(np.prod(shape))
             if sh:
                 out.append(p_sh[i_sh:i_sh + n].reshape(shape))
@@ -368,7 +371,6 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
     ns = lambda s: NamedSharding(mesh, s)                   # noqa: E731
     param_sh = jax.tree.map(ns, pspecs)
     opt_sh = jax.tree.map(ns, ospecs)
-    opt_abstract = jax.eval_shape(opt.init, aparams)
     rep = lambda t: jax.tree.map(lambda _: P(), t)          # noqa: E731
     batch_spec = P(ota_axes)
 
@@ -391,8 +393,8 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
             out_specs=(jax.tree.unflatten(
                 treedef,
                 [P(ota_axes if len(ota_axes) > 1 else ota_axes[0],
-                   *([None] * len(l.shape)))
-                 for _, l, _, _ in info]), P()),
+                   *([None] * len(lf.shape)))
+                 for _, lf, _, _ in info]), P()),
             axis_names=set(ota_axes), check_vma=False)
         phase2 = shard_map(
             agg_body, mesh=mesh,

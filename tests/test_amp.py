@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.amp import (amp_decode, amp_decode_blocked,
                             amp_decode_blocked_scan, amp_decode_dense)

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import amp as amp_mod
 from repro.core.amp import (amp_blocked_core, amp_decode, amp_decode_blocked,
                             amp_decode_blocked_scan)
 from repro.core.projection import BlockedProjector

@@ -1,7 +1,6 @@
 """Numerical checks of the §V convergence machinery (Lemmas 2-4, Thm 1)."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core import convergence as cv

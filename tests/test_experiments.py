@@ -19,9 +19,7 @@ from repro.experiments import (
     run_sweep,
 )
 from repro.optim.optim import Optimizer
-from repro.train.paper_repro import (
-    accuracy, ce_loss, device_grads, init_linear, run_federated,
-)
+from repro.train.paper_repro import device_grads, run_federated
 
 STEPS, EVERY, M, B = 6, 2, 4, 64
 
@@ -107,6 +105,54 @@ def test_sweep_vmapped_p_grid_matches_looped_runs(data):
                                  dataclasses.replace(base, p_avg=p),
                                  steps=STEPS, lr=1e-3, eval_every=EVERY)
             assert res.record(p_avg=p)["accs"] == loop.accs
+
+
+def test_sweep_fading_axes_vmapped_match_looped(data):
+    """The channel-model scalars ride the vmapped path (one XLA program per
+    static combo, never re-jitted per point) and reproduce per-point looped
+    runs bitwise — including the csi_err_var = 0 point, which must equal a
+    looped run of the *perfect-CSI* fading scheme (zero estimation error
+    degrades bitwise, per the golden)."""
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(scheme="a_dsgd_csi_err", fading_threshold=0.2)
+    res = run_sweep((xd, yd), (xte, yte), base,
+                    {"csi_err_var": [0.0, 0.4],
+                     "fading_threshold": [0.2, 0.6]},
+                    steps=STEPS, eval_every=EVERY)
+    assert len(res.records) == 4
+    for ev in (0.0, 0.4):
+        for thr in (0.2, 0.6):
+            loop = run_federated(
+                xd, yd, xte, yte,
+                dataclasses.replace(base, csi_err_var=ev,
+                                    fading_threshold=thr),
+                steps=STEPS, lr=1e-3, eval_every=EVERY)
+            assert res.record(csi_err_var=ev,
+                              fading_threshold=thr)["accs"] == loop.accs
+    perfect = run_federated(
+        xd, yd, xte, yte,
+        dataclasses.replace(base, scheme="a_dsgd_fading",
+                            fading_threshold=0.6),
+        steps=STEPS, lr=1e-3, eval_every=EVERY)
+    assert res.record(csi_err_var=0.0,
+                      fading_threshold=0.6)["accs"] == perfect.accs
+
+
+def test_sweep_fading_rho_axis_gauss_markov(data):
+    """fading_rho vmaps over the windowed-MA weights of the gauss_markov
+    process; each point still equals its looped run bitwise."""
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(scheme="a_dsgd_fading", fading_process="gauss_markov",
+                  fading_window=16, fading_threshold=0.3)
+    res = run_sweep((xd, yd), (xte, yte), base,
+                    {"fading_rho": [0.2, 0.95]}, steps=STEPS,
+                    eval_every=EVERY)
+    r_lo, r_hi = res.record(fading_rho=0.2), res.record(fading_rho=0.95)
+    assert r_lo["accs"] != r_hi["accs"]
+    loop = run_federated(xd, yd, xte, yte,
+                         dataclasses.replace(base, fading_rho=0.95),
+                         steps=STEPS, lr=1e-3, eval_every=EVERY)
+    assert r_hi["accs"] == loop.accs
 
 
 def test_sweep_power_schedule_axis(data):

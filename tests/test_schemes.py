@@ -101,6 +101,17 @@ def test_simulated_driver_bitwise_parity(case):
     np.testing.assert_array_equal(np.asarray(nd), _GOLDEN[f"{case}__deltas"])
 
 
+def test_csi_err_zero_is_fading_golden():
+    """a_dsgd_csi_err at zero estimation error degrades *bitwise* to
+    a_dsgd_fading: the estimate h_hat = h + 0*e is IEEE-exact and the
+    misalignment gain is exactly 1.0, so the two goldens must be the same
+    arrays (acceptance criterion of the fading-suite PR)."""
+    np.testing.assert_array_equal(_GOLDEN["a_dsgd_csi_err0__ghat"],
+                                  _GOLDEN["a_dsgd_rayleigh__ghat"])
+    np.testing.assert_array_equal(_GOLDEN["a_dsgd_csi_err0__deltas"],
+                                  _GOLDEN["a_dsgd_rayleigh__deltas"])
+
+
 # ---------------------------------------------------------------------------
 # driver parity: ideal scheme, simulated == sharded (single host)
 # ---------------------------------------------------------------------------

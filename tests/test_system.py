@@ -1,6 +1,5 @@
 """End-to-end behaviour: the paper's federated pipeline on the MNIST
 surrogate — scheme orderings and robustness claims in miniature (§VI)."""
-import numpy as np
 import pytest
 
 from repro.configs.base import OTAConfig
