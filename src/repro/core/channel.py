@@ -62,6 +62,23 @@ def mac_sum(frames: jnp.ndarray, key: jnp.ndarray, sigma2: float) -> jnp.ndarray
     return y + awgn(key, y.shape, sigma2, y.dtype)
 
 
+def site_awgn(key: jnp.ndarray, shape, sigma2, n_sites: int,
+              site_noise_scale=1.0, dtype=jnp.float32) -> jnp.ndarray:
+    """Summed receiver noise of a hierarchical MAC (n_sites edge sites).
+
+    Each site observes its own OTA partial sum plus AWGN of variance
+    ``sigma2 * site_noise_scale`` (keyed ``fold_in(key, site)``); combining
+    the forwarded partials at the PS adds the site noises, so the
+    effective MAC noise grows linearly in n_sites — the modeled price of
+    hierarchy (repro.population.hierarchy).  Both scalars may be traced.
+    """
+    sig = jnp.asarray(sigma2, dtype) * jnp.asarray(site_noise_scale, dtype)
+    z = jax.vmap(
+        lambda j: awgn(jax.random.fold_in(key, j), shape, sig, dtype)
+    )(jnp.arange(n_sites))
+    return jnp.sum(z, axis=0)
+
+
 #: a received scale slot below this is indistinguishable from the unit-
 #: variance AWGN — the PS then skips the rescale (scale 1.0) instead of
 #: amplifying a noise reading (dividing by a tiny/negative slot would blow

@@ -161,10 +161,26 @@ def sharded_round(scheme, g_slice: jnp.ndarray, delta_slice: jnp.ndarray,
         sigma2 = round_sigma2(scheme, draw)
         shard_idx, n_shards = shard_info(ctx.shard_axes)
         body_key = jax.random.fold_in(key, shard_idx.astype(jnp.int32))
-        y_body = y_body + channel.awgn(body_key, y_body.shape, sigma2)
-        if y_slots is not None:
-            slot_key = jax.random.fold_in(key, n_shards + 7)
-            y_slots = y_slots + channel.awgn(slot_key, y_slots.shape, sigma2)
+        n_sites = (len(ctx.groups)
+                   if ctx.site_mac and ctx.groups is not None else 1)
+        if n_sites > 1:
+            # hierarchical MAC: each edge-site group's partial sum carries
+            # its own receiver AWGN per channel slice (summed by the PS
+            # combine), mirroring round_sharded's site path
+            y_body = y_body + channel.site_awgn(
+                body_key, y_body.shape, sigma2, n_sites,
+                site_noise_scale=ctx.site_noise_scale)
+            if y_slots is not None:
+                slot_key = jax.random.fold_in(key, n_shards + 7)
+                y_slots = y_slots + channel.site_awgn(
+                    slot_key, y_slots.shape, sigma2, n_sites,
+                    site_noise_scale=ctx.site_noise_scale)
+        else:
+            y_body = y_body + channel.awgn(body_key, y_body.shape, sigma2)
+            if y_slots is not None:
+                slot_key = jax.random.fold_in(key, n_shards + 7)
+                y_slots = y_slots + channel.awgn(slot_key, y_slots.shape,
+                                                 sigma2)
 
     ghat_slice = scheme.decode_slice({"body": y_body, "slots": y_slots},
                                      step, ctx)

@@ -98,6 +98,10 @@ class MACContext:
     frame_dtype: Any = None                      # psum analog bodies in bf16
     shard_decode: bool = False                   # split PS AMP across devices
     use_kernel: bool = False                     # Pallas projection/AMP path
+    # hierarchical MAC: each edge-site group receives its own AWGN (the
+    # partial OTA sums combine over the backhaul; repro.population.hierarchy)
+    site_mac: bool = False
+    site_noise_scale: Any = 1.0                  # per-site variance scale
 
     @property
     def group_size(self) -> int:
@@ -279,6 +283,32 @@ class Scheme:
         """
         p_factor, active = self.device_factors(key, m)
         return ChannelDraw(p_factor, active)
+
+    def cohort_channel_draw(self, key: jnp.ndarray, step,
+                            cohort: jnp.ndarray, m_total: int,
+                            mask=None) -> ChannelDraw:
+        """The K-cohort's rows of the full-population channel realisation.
+
+        Evaluates :meth:`channel_draw` at the population size ``m_total``
+        from the same salted key and gathers the cohort's rows — a K < M
+        cohort sees exactly the channels the full simulation would have
+        dealt those devices, and a K == M cohort (``cohort == arange(M)``)
+        reproduces the legacy draw bitwise.  Costs O(m_total) scalars per
+        round, never O(m_total * d).  ``mask`` (K,) bool marks live cohort
+        rows; it is scattered to the full population so device-coupled
+        draws (the blind PS combiner) see the true transmitter set.
+        """
+        full_mask = None
+        if mask is not None:
+            full_mask = jnp.zeros((m_total,), bool).at[cohort].set(mask)
+        draw = self.channel_draw(key, step, m_total, mask=full_mask)
+
+        def take(v):
+            return None if v is None else jnp.take(v, cohort, axis=0)
+
+        return ChannelDraw(take(draw.p_factor), take(draw.active),
+                           gain=take(draw.gain),
+                           noise_scale=draw.noise_scale)
 
     def silent_state(self, g: jnp.ndarray, state: jnp.ndarray,
                      new_state: jnp.ndarray) -> jnp.ndarray:
@@ -814,7 +844,16 @@ def round_sharded(scheme: Scheme, g_local: jnp.ndarray,
     if group_size > 1:
         y = y / group_size
     if scheme.analog:
-        y = y + channel.awgn(jax.random.fold_in(key, 0), y.shape,
-                             round_sigma2(scheme, draw), y.dtype)
+        mac_key = jax.random.fold_in(key, 0)
+        sigma2 = round_sigma2(scheme, draw)
+        if ctx.site_mac and ctx.groups is not None and len(ctx.groups) > 1:
+            # hierarchical MAC: every edge-site group's partial OTA sum
+            # carries its own receiver AWGN, summed by the backhaul combine
+            y = y + channel.site_awgn(mac_key, y.shape, sigma2,
+                                      len(ctx.groups),
+                                      site_noise_scale=ctx.site_noise_scale,
+                                      dtype=y.dtype)
+        else:
+            y = y + channel.awgn(mac_key, y.shape, sigma2, y.dtype)
     ghat = scheme.decode(y, step, ctx)
     return ghat, new_delta, metrics

@@ -35,7 +35,8 @@ compiled engine runs) and deterministic given ``seed``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -181,6 +182,129 @@ def make_partition(x: np.ndarray, y: np.ndarray, m: int, b: int,
         raise ValueError(
             f"unknown partition kind {kind!r}; known: {PARTITION_KINDS}")
     return x[idx], y[idx]
+
+
+# ---------------------------------------------------------------------------
+# population-scale shard assignment (repro.population): O(M) arithmetic
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PopulationPartition:
+    """Shard assignment for an M-large population as index *arithmetic*.
+
+    The materialising partitioners above build (M, B) index tables — fine
+    for M <= a few dozen, impossible at M = 10^5..10^6.  This class stores
+    O(N + C) arrays and computes any device's sample rows on demand:
+
+    ``iid``
+        a single (N,) permutation ``order``; device m's j-th sample is
+        ``order[(m*B + j) mod N]`` — consecutive windows of one shuffled
+        epoch, wrapping with replacement across devices once M*B > N (the
+        paper's fixed-total-dataset regime: growing M shrinks each
+        device's share of the same N samples).
+
+    ``label_shards``
+        the paper's protocol by class cycling: global shard
+        ``t = m*spd + s`` holds class ``class_perm[t mod C]`` (consecutive
+        shards cycle the class list, so each device's spd classes are
+        distinct for spd <= C), and the ``u = t div C``-th use of a class
+        reads rows ``[u*per, u*per + per)`` of that class's shuffled pool,
+        wrapping mod the pool size.
+
+    :meth:`sample_indices` is pure gather/mod arithmetic, so it traces
+    under jit — the population engine calls it per round on the (K,)
+    cohort and only (K, B) indices ever materialise.
+    """
+
+    kind: str
+    m: int
+    b: int
+    n: int
+    n_classes: int = 0
+    order: Optional[np.ndarray] = None       # (N,) iid sample permutation
+    class_perm: Optional[np.ndarray] = None  # (C,) label_shards class cycle
+    pools: Optional[np.ndarray] = None       # (C, P) padded per-class pools
+    sizes: Optional[np.ndarray] = None       # (C,) true pool sizes
+    shards_per_device: int = 0
+
+    def sample_indices(self, devices):
+        """(K, B) training-set rows of the given device ids (traceable)."""
+        import jax.numpy as jnp
+
+        dev = jnp.asarray(devices).astype(jnp.int32)[:, None]
+        j = jnp.arange(self.b, dtype=jnp.int32)[None, :]
+        if self.kind == "iid":
+            return jnp.asarray(self.order)[(dev * self.b + j) % self.n]
+        per = self.b // self.shards_per_device
+        t = dev * self.shards_per_device + j // per
+        cls = jnp.asarray(self.class_perm)[t % self.n_classes]
+        pos = ((t // self.n_classes) * per + j % per) % jnp.asarray(
+            self.sizes)[cls]
+        return jnp.asarray(self.pools)[cls, pos]
+
+    def device_labels(self, device: int) -> np.ndarray:
+        """The distinct classes device ``device`` holds (host helper)."""
+        if self.kind == "iid":
+            raise ValueError("iid devices have no fixed class set")
+        t = device * self.shards_per_device + np.arange(
+            self.shards_per_device)
+        return np.asarray(self.class_perm)[t % self.n_classes]
+
+
+def population_partition(y: np.ndarray, m: int, b: int, kind: str = "iid",
+                         shards_per_device: int = 2, n_classes: int = 0,
+                         seed: int = 0) -> PopulationPartition:
+    """Build a :class:`PopulationPartition` in O(N + C) — no (M, B) table.
+
+    ``dirichlet`` is deliberately unsupported at population scale: its
+    per-device proportion draws are O(M * C) state with no arithmetic
+    shortcut — materialise via :func:`make_partition` for small M instead.
+    """
+    n = len(y)
+    if kind == "iid":
+        return PopulationPartition(kind="iid", m=m, b=b, n=n,
+                                   order=_rng(seed).permutation(n))
+    if kind == "label_shards":
+        n_classes = n_classes or int(y.max()) + 1
+        if shards_per_device > n_classes:
+            raise ValueError(
+                f"population label_shards needs shards_per_device <= "
+                f"n_classes; got {shards_per_device} > {n_classes}")
+        if b % shards_per_device:
+            raise ValueError(
+                f"population label_shards needs shards_per_device | b; "
+                f"got B={b}, spd={shards_per_device}")
+        rng = _rng(seed)
+        pools_l = [rng.permutation(np.flatnonzero(y == c))
+                   for c in range(n_classes)]
+        sizes = np.asarray([len(p) for p in pools_l], np.int64)
+        if sizes.min() == 0:
+            raise ValueError("every class needs at least one sample")
+        pools = np.zeros((n_classes, int(sizes.max())), np.int64)
+        for c, p in enumerate(pools_l):
+            pools[c, :len(p)] = p
+        return PopulationPartition(
+            kind="label_shards", m=m, b=b, n=n, n_classes=n_classes,
+            class_perm=rng.permutation(n_classes), pools=pools, sizes=sizes,
+            shards_per_device=shards_per_device)
+    raise ValueError(
+        f"unknown population partition kind {kind!r}; known: "
+        "('iid', 'label_shards')")
+
+
+def population_label_bias(part: PopulationPartition, y: np.ndarray,
+                          devices=None, n_classes: int = 0) -> float:
+    """:func:`label_bias` of a population split, from a device subsample.
+
+    Materialises only the sampled devices' label rows (O(K * B)), so the
+    bias of an M = 10^5 split is measurable from a few hundred devices —
+    consistency under subsampling is pinned by tests/test_partition.py.
+    """
+    devices = (np.arange(part.m) if devices is None
+               else np.asarray(devices))
+    idx = np.asarray(part.sample_indices(devices))
+    return label_bias(np.asarray(y)[idx], n_classes)
 
 
 def label_bias(y_dev: np.ndarray, n_classes: int = 0) -> float:

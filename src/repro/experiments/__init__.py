@@ -12,5 +12,6 @@ from repro.experiments.engine import (  # noqa: F401
     round_masked, run_compiled,
 )
 from repro.experiments.sweep import (  # noqa: F401
-    SCALAR_VMAP_AXES, VMAP_AXES, SweepResult, run_sweep,
+    POP_VMAP_AXES, SCALAR_VMAP_AXES, VMAP_AXES, SweepResult,
+    run_population_sweep, run_sweep,
 )

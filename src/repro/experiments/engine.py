@@ -90,7 +90,8 @@ class EngineRun:
 
 
 def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
-                 step, key: jnp.ndarray, mask: jnp.ndarray, ctx: MACContext):
+                 step, key: jnp.ndarray, mask: jnp.ndarray, ctx: MACContext,
+                 *, dev_keys=None, draw=None, mac=None):
     """:func:`~repro.core.schemes.round_simulated` with a traced device mask.
 
     ``mask`` (M_pad,) marks which padded devices exist at this grid point:
@@ -100,17 +101,29 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
     count.  The RNG layout (key salts, ``split(key, M_pad)``) matches
     ``round_simulated`` at ``M = M_pad``, so an all-ones mask reproduces it
     exactly (masking multiplies frames by 1.0 and adds 0.0 to the sum).
+
+    The keyword hooks re-seat the round on a sampled cohort
+    (:mod:`repro.population`): ``dev_keys`` (M_pad, ...) replaces the
+    in-place key split, ``draw`` replaces the channel realisation (the
+    cohort view of a full-population draw), and ``mac`` — a callable
+    ``(frames, key, sigma2) -> y`` — replaces the flat analog MAC sum
+    (hierarchical edge-site aggregation).  Defaults preserve the legacy
+    path bitwise.
     """
     m_pad = grads.shape[0]
     mask_b = mask > 0
-    m_eff = jnp.sum(mask.astype(jnp.float32))
+    # the max guard only engages when *every* device is masked out (an
+    # empty cohort round); any populated mask is untouched bitwise
+    m_eff = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
     ctx = dataclasses.replace(ctx, m=m_eff)
-    dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_pad)
-    # device-coupled draws (the blind PS combiner) must not see the padded
-    # phantom devices' channels; an all-ones mask multiplies rows by 1.0,
-    # so the unmasked equivalence below still holds bitwise
-    draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m_pad,
-                               mask=mask_b)
+    if dev_keys is None:
+        dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_pad)
+    if draw is None:
+        # device-coupled draws (the blind PS combiner) must not see the
+        # padded phantom devices' channels; an all-ones mask multiplies
+        # rows by 1.0, so the unmasked equivalence below still holds bitwise
+        draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m_pad,
+                                   mask=mask_b)
     active = draw.active
     frames, new_deltas, metrics = jax.vmap(
         lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
@@ -122,8 +135,10 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
         active = active & mask_b
         frames = schemes_mod.apply_channel_gain(
             frames, draw._replace(active=active))
-        y = channel.mac_sum(frames, jax.random.fold_in(key, 0),
-                            schemes_mod.round_sigma2(scheme, draw))
+        mac_key = jax.random.fold_in(key, 0)
+        sigma2 = schemes_mod.round_sigma2(scheme, draw)
+        y = (channel.mac_sum(frames, mac_key, sigma2) if mac is None
+             else mac(frames, mac_key, sigma2))
     else:
         active = active & mask_b
         frames = frames * mask_b[:, None]

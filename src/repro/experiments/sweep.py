@@ -60,6 +60,14 @@ VMAP_AXES = ("p_avg", "power_schedule", "seed", "m_active")
 #: are structure-defining and stay static.
 SCALAR_VMAP_AXES = ("csi_err_var", "fading_threshold", "fading_rho")
 
+#: population knobs that enter the round as one traced scalar each
+#: (compares/multiplies inside the cohort mask and the site MAC), swapped
+#: onto the CompiledPopulation runner via its with_overrides — vmapped like
+#: the channel scalars.  ``k_cohort`` / ``n_sites`` / ``capacity`` are
+#: shape-defining and stay static (docs/DESIGN.md §9).
+POP_VMAP_AXES = ("avail_rate", "straggler_deadline", "k_active",
+                 "site_noise_scale", "backhaul_sigma2")
+
 
 @dataclass
 class SweepResult:
@@ -177,6 +185,123 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
             accs = outs["acc"][g]
             rec: Dict[str, Any] = {**static_d, **point}
             rec["accs"] = [float(accs[i]) for i in idx]
+            rec["losses"] = [float(outs["loss"][g][i]) for i in idx]
+            rec["metrics"] = [
+                {k: float(v[g][i]) for k, v in outs["metrics"].items()}
+                for i in idx]
+            rec["final_acc"] = rec["accs"][-1]
+            records.append(rec)
+
+    wall = time.time() - t0
+    us = wall / max(len(records) * steps, 1) * 1e6
+    for rec in records:
+        rec["us_per_call"] = us
+    return SweepResult(records=records, eval_steps=eval_indices(
+        steps, eval_every), steps=steps, wall_s=wall)
+
+
+def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
+                         axes: Dict[str, Sequence], *, steps: int,
+                         lr: float = 1e-3, eval_every: int = 10,
+                         optimizer: str = "adam", seed: int = 0,
+                         use_kernel: bool = False) -> SweepResult:
+    """:func:`run_sweep` over the sampled-cohort population engine.
+
+    ``data`` is a :class:`repro.population.PopulationData`; ``base_pop`` a
+    :class:`repro.population.PopulationConfig`.  Vmapped axes are
+    ``p_avg`` / ``power_schedule`` / ``seed``, the channel scalars
+    (``SCALAR_VMAP_AXES``) and the population scalars (``POP_VMAP_AXES``);
+    static axes are any OTAConfig *or* PopulationConfig field (grouped by
+    combo, one compile each).  ``m_active`` is a padded-M dense-engine
+    axis — its sampled-cohort analogue here is ``k_active`` (every value
+    must be <= the static ``k_cohort``).
+    """
+    from repro.population.engine import (
+        CompiledPopulation, PopulationExperiment,
+    )
+    from repro.population.state import PopulationConfig
+
+    (xt, yt) = test_data
+    axes = {k: list(v) for k, v in axes.items()}
+    cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
+    pop_fields = {f.name for f in dataclasses.fields(PopulationConfig)}
+    vmapped = ("p_avg", "power_schedule", "seed") + SCALAR_VMAP_AXES \
+        + POP_VMAP_AXES
+    for name, values in axes.items():
+        if name == "m_active":
+            raise KeyError(
+                "m_active is a dense-engine axis; the population engine "
+                "sweeps the cohort via k_active")
+        if name not in vmapped and name not in cfg_fields \
+                and name not in pop_fields:
+            raise KeyError(
+                f"unknown sweep axis {name!r}: vmapped axes are {vmapped}, "
+                "static axes are OTAConfig/PopulationConfig fields")
+        if not len(values):
+            raise ValueError(f"sweep axis {name!r} is empty")
+    if "k_active" in axes and max(axes["k_active"]) > base_pop.k_cohort:
+        raise ValueError(
+            f"k_active values must be <= k_cohort = {base_pop.k_cohort}")
+
+    static_names = [k for k in axes if k not in vmapped]
+    vmap_names = [k for k in axes if k in vmapped]
+    records: List[Dict[str, Any]] = []
+    t0 = time.time()
+
+    for static_vals in itertools.product(*[axes[k] for k in static_names]):
+        static_d = dict(zip(static_names, static_vals))
+        cfg = dataclasses.replace(
+            base, **{k: v for k, v in static_d.items() if k in cfg_fields})
+        pop = dataclasses.replace(
+            base_pop,
+            **{k: v for k, v in static_d.items() if k in pop_fields})
+        exp = PopulationExperiment(cfg=cfg, pop=pop, steps=steps, lr=lr,
+                                   eval_every=eval_every,
+                                   optimizer=optimizer, seed=seed,
+                                   use_kernel=use_kernel)
+        cp = CompiledPopulation(data, xt, yt, exp)
+        digital = hasattr(cp.scheme, "q_sched")
+
+        grid = ([dict(zip(vmap_names, vals)) for vals in itertools.product(
+            *[axes[k] for k in vmap_names])] if vmap_names else [{}])
+
+        scalar_names = [k for k in vmap_names
+                        if k in SCALAR_VMAP_AXES or k in POP_VMAP_AXES]
+        p_rows, q_rows, key_rows = [], [], []
+        scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
+        for point in grid:
+            p_np = power.schedule_array(
+                cfg.total_steps, point.get("p_avg", cfg.p_avg),
+                point.get("power_schedule", cfg.power_schedule))
+            p_rows.append(np.asarray(p_np, np.float32))
+            if digital:
+                # the digital bit budget tracks the point's effective
+                # cohort (the k_active analogue of m_active's q rule)
+                q_rows.append(cp.scheme.build_q_schedule(
+                    int(point.get("k_active", pop.k_cohort)), p_np))
+            key_rows.append(round_keys(steps, point.get("seed", seed)))
+            for k in scalar_names:
+                scalar_rows[k].append(point[k])
+
+        overrides = {"p_sched": jnp.asarray(np.stack(p_rows))}
+        for k in scalar_names:
+            overrides[k] = jnp.asarray(scalar_rows[k], jnp.float32)
+        if digital:
+            q_grid = np.stack(q_rows)
+            cp.scheme.q_max = int(max(int(q_grid.max()), 1))
+            overrides["q_sched"] = jnp.asarray(q_grid, jnp.int32)
+        keys = jnp.stack(key_rows)
+
+        ov_axes = {k: 0 for k in overrides}
+        outs = jax.jit(jax.vmap(cp.run, in_axes=(ov_axes, 0)))(
+            overrides, keys)
+        outs.pop("params")
+        outs = jax.tree.map(np.asarray, outs)
+
+        idx = eval_indices(steps, eval_every)
+        for g, point in enumerate(grid):
+            rec: Dict[str, Any] = {**static_d, **point}
+            rec["accs"] = [float(outs["acc"][g][i]) for i in idx]
             rec["losses"] = [float(outs["loss"][g][i]) for i in idx]
             rec["metrics"] = [
                 {k: float(v[g][i]) for k, v in outs["metrics"].items()}

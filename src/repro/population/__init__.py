@@ -1,0 +1,40 @@
+"""Massive-cohort population engine: sampled rounds over 10^4-10^6 devices.
+
+Public surface of the subsystem (docs/DESIGN.md §9): banked per-device
+state with gather/scatter cohort views (:mod:`.state`), deterministic
+Gumbel-top-k cohort sampling (:mod:`.sampler`), churn and straggler models
+(:mod:`.churn`, :mod:`.stragglers`), hierarchical edge-site aggregation
+(:mod:`.hierarchy`), and the compiled sampled-cohort round engine
+(:mod:`.engine`).  Sweep grids over population axes run through
+:func:`repro.experiments.run_population_sweep`.
+"""
+
+from repro.population.engine import (
+    POP_OVERRIDE_ATTRS, CompiledPopulation, PopulationData,
+    PopulationExperiment, population_round, run_population,
+)
+from repro.population.hierarchy import site_assignment, site_mac_sum
+from repro.population.sampler import sample_cohort
+from repro.population.state import (
+    BankedState, PopulationConfig, PopulationState, gather_cohort,
+    init_banks, init_population, scatter_cohort,
+)
+
+__all__ = [
+    "BankedState",
+    "CompiledPopulation",
+    "POP_OVERRIDE_ATTRS",
+    "PopulationConfig",
+    "PopulationData",
+    "PopulationExperiment",
+    "PopulationState",
+    "gather_cohort",
+    "init_banks",
+    "init_population",
+    "population_round",
+    "run_population",
+    "sample_cohort",
+    "scatter_cohort",
+    "site_assignment",
+    "site_mac_sum",
+]

@@ -1,0 +1,67 @@
+"""Churn: arrival/departure traces + per-round availability.
+
+Two time scales compose into one bool mask per round:
+
+* a run-level **arrival–departure trace** — device m exists during
+  ``[arrival_m, departure_m)``, with arrivals spread over the first
+  ``arrival_spread`` fraction of the run and exponential lifetimes of mean
+  ``mean_lifetime`` rounds (0 = immortal);
+* a per-round **Bernoulli availability** draw at rate ``avail_rate`` —
+  the device is up but may be off-charger/off-wifi this round.
+
+``avail_rate`` enters as a traced compare (``uniform < rate``), so it is a
+vmappable sweep axis; the trace arrays are drawn once per run.  At the
+defaults (no spread, immortal, rate 1.0) every device is available every
+round — ``uniform(key) < 1.0`` is always true, preserving the K == M
+bitwise parity path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.population.state import NEVER
+
+
+def init_arrival_departure(
+    key: jnp.ndarray,
+    m: int,
+    steps: int,
+    arrival_spread: float = 0.0,
+    mean_lifetime: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(arrival, departure) int32 round indices per device."""
+    k_arr, k_life = jax.random.split(key)
+    if arrival_spread > 0:
+        window = max(1.0, arrival_spread * steps)
+        arrival = jnp.floor(
+            jax.random.uniform(k_arr, (m,)) * window
+        ).astype(jnp.int32)
+    else:
+        arrival = jnp.zeros((m,), jnp.int32)
+    if mean_lifetime > 0:
+        life = jnp.ceil(
+            jax.random.exponential(k_life, (m,)) * mean_lifetime
+        ).astype(jnp.int32)
+        departure = arrival + jnp.maximum(life, 1)
+    else:
+        departure = jnp.full((m,), NEVER, jnp.int32)
+    return arrival, departure
+
+
+def availability(
+    arrival: jnp.ndarray,
+    departure: jnp.ndarray,
+    t,
+    key: jnp.ndarray,
+    avail_rate,
+) -> jnp.ndarray:
+    """(M,) bool: device exists at round t AND is up this round."""
+    present = (arrival <= t) & (t < departure)
+    up = jax.random.uniform(key, arrival.shape) < jnp.asarray(
+        avail_rate, jnp.float32
+    )
+    return present & up

@@ -1,0 +1,294 @@
+"""Sampled-cohort round engine: federated runs over M-large populations.
+
+One round = draw availability -> sample a K-cohort -> gather banked error
+state and cohort data -> run the existing scheme encode/MAC/decode on the
+K rows only (via :func:`repro.experiments.engine.round_masked` with
+injected cohort-indexed device keys and channel draw) -> scatter the
+updated accumulators back.  The whole federated run is one ``jit(lax.scan)``
+— the scan carry is ``(params, opt_state, banks)``; per-round temporaries
+are O(K * d) plus O(M) scalars (keys/scores/masks), never O(M * d).
+
+RNG layout: round t of seed 0 uses ``PRNGKey(1000 + t)`` (the engine's key
+stream), salted per consumer — 0 MAC AWGN, 1 device encode, 2 channel draw
+(shared with the dense drivers), plus the population's own salts
+3 availability, 4 cohort sampling, 5 straggler latency.  Device m's encode
+key is row m of ``split(fold_in(key, 1), M)`` and its channel row comes
+from the full-M draw (:meth:`Scheme.cohort_channel_draw`), so a K == M
+cohort with no churn/stragglers reproduces ``round_simulated`` /
+``run_compiled`` bitwise — pinned by the ``population_full`` golden.
+
+Traced per-round knobs (``avail_rate``, ``straggler_deadline``,
+``k_active``, ``site_noise_scale``, ``backhaul_sigma2``) live as
+attributes on :class:`CompiledPopulation` and are swapped per grid point
+via :meth:`CompiledPopulation.with_overrides` — the same contract as
+``Scheme.with_overrides`` — which is how
+:func:`repro.experiments.sweep.run_population_sweep` vmaps whole grids
+over them.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OTAConfig
+from repro.core.schemes import MACContext, Scheme, get_scheme
+from repro.data.partition import PopulationPartition
+from repro.experiments.engine import (
+    EngineRun, _subsample, round_keys, round_masked,
+)
+from repro.optim.optim import Optimizer
+from repro.population import churn, stragglers
+from repro.population.hierarchy import site_mac_sum
+from repro.population.sampler import sample_cohort
+from repro.population.state import (
+    BankedState, PopulationConfig, gather_cohort, init_population,
+    scatter_cohort,
+)
+from repro.train.paper_repro import accuracy, ce_loss, device_grads, init_linear
+
+#: round-key salts owned by the population layer (0/1/2 belong to the MAC /
+#: encode / channel-draw consumers, matching round_simulated)
+SALT_AVAIL, SALT_SAMPLE, SALT_LATENCY = 3, 4, 5
+
+#: CompiledPopulation attributes that ride the vmapped override path
+POP_OVERRIDE_ATTRS = (
+    "avail_rate",
+    "straggler_deadline",
+    "k_active",
+    "site_noise_scale",
+    "backhaul_sigma2",
+)
+
+
+class PopulationData:
+    """Training data addressable by cohort.
+
+    Two layouts behind one ``cohort_batch`` view: dense per-device tensors
+    ``(M, B, dim)`` (small M — the legacy layout, used by the parity
+    tests), or a sample pool ``(N, dim)`` plus a
+    :class:`~repro.data.partition.PopulationPartition` whose arithmetic
+    shard addressing materialises only the cohort's ``(K, B)`` rows inside
+    the trace (large M — nothing (M, B)-sized ever exists).
+    """
+
+    def __init__(self, m, b, dim, n_classes, *, xd=None, yd=None, x=None,
+                 y=None, part: Optional[PopulationPartition] = None):
+        self.m, self.b, self.dim, self.n_classes = m, b, dim, n_classes
+        self.xd, self.yd = xd, yd
+        self.x, self.y, self.part = x, y, part
+
+    @classmethod
+    def from_dense(cls, x_dev, y_dev) -> "PopulationData":
+        m, b, dim = x_dev.shape
+        return cls(m, b, dim, int(np.max(y_dev)) + 1,
+                   xd=jnp.asarray(x_dev), yd=jnp.asarray(y_dev))
+
+    @classmethod
+    def from_pool(cls, x, y, part: PopulationPartition) -> "PopulationData":
+        if len(y) != part.n:
+            raise ValueError(
+                f"pool has {len(y)} samples, partition expects {part.n}")
+        return cls(part.m, part.b, x.shape[-1], int(np.max(y)) + 1,
+                   x=jnp.asarray(x), y=jnp.asarray(y), part=part)
+
+    def cohort_batch(self, cohort: jnp.ndarray):
+        """(K, B, dim), (K, B) batches of the cohort's devices (traced)."""
+        if self.xd is not None:
+            return self.xd[cohort], self.yd[cohort]
+        idx = self.part.sample_indices(cohort)
+        return self.x[idx], self.y[idx]
+
+
+def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
+                     mask: jnp.ndarray, grads: jnp.ndarray, step,
+                     key: jnp.ndarray, ctx: MACContext, m_total: int, *,
+                     gains=None, sites=None, n_sites: int = 1,
+                     site_noise_scale=1.0, backhaul_sigma2=0.0):
+    """One sampled-cohort aggregation round.
+
+    cohort: (K,) sorted device ids; mask: (K,) 0/1 participation (churn,
+    stragglers, k_active already folded in); grads: (K, d) cohort
+    gradients.  ``gains``/``sites`` are the cohort rows of the population's
+    large-scale gain / edge-site arrays.  Returns
+    ``(ghat, new_banks, metrics)``.
+
+    The round is :func:`round_masked` with cohort-addressed injections:
+    device keys are the cohort rows of the full-M key split, the channel
+    draw is the cohort view of the full-M realisation, large-scale gains
+    multiply the received-power factor, and (for n_sites > 1) the MAC is
+    the hierarchical two-stage sum.  All injections degrade bitwise to the
+    dense driver at K == M with the defaults (identity gather, gains 1.0,
+    flat MAC).
+    """
+    deltas = gather_cohort(banks, cohort)
+    dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_total)[cohort]
+    draw = scheme.cohort_channel_draw(jax.random.fold_in(key, 2), step,
+                                      cohort, m_total, mask=mask > 0)
+    if gains is not None:
+        draw = draw._replace(p_factor=draw.p_factor * gains)
+    mac = None
+    if n_sites > 1:
+        if sites is None:
+            raise ValueError("n_sites > 1 needs the cohort's site ids")
+
+        def mac(frames, mac_key, sigma2):
+            return site_mac_sum(frames, sites, n_sites, mac_key, sigma2,
+                                site_noise_scale=site_noise_scale,
+                                backhaul_sigma2=backhaul_sigma2)
+
+    ghat, new_deltas, metrics = round_masked(scheme, grads, deltas, step,
+                                             key, mask, ctx,
+                                             dev_keys=dev_keys, draw=draw,
+                                             mac=mac)
+    banks = scatter_cohort(banks, cohort, new_deltas)
+    metrics["cohort_frac"] = jnp.sum(mask) / cohort.shape[0]
+    return ghat, banks, metrics
+
+
+@dataclass(frozen=True)
+class PopulationExperiment:
+    """Static description of one population training configuration."""
+    cfg: OTAConfig
+    pop: PopulationConfig
+    steps: int
+    lr: float = 1e-3
+    eval_every: int = 10
+    optimizer: str = "adam"
+    local_steps: int = 1
+    local_lr: float = 0.1
+    seed: int = 0
+    use_kernel: bool = False
+
+
+class CompiledPopulation:
+    """Compile-once runner: one population configuration, one scan.
+
+    :meth:`run` is a pure traced function — ``jit``/``vmap`` it freely.
+    ``overrides`` splits between the scheme (``p_sched``/``q_sched`` and
+    the channel scalars, via ``Scheme.with_overrides``) and the runner's
+    own traced knobs (``POP_OVERRIDE_ATTRS``, via :meth:`with_overrides`).
+    """
+
+    def __init__(self, data: PopulationData, x_test, y_test,
+                 exp: PopulationExperiment):
+        pop = exp.pop
+        if data.m != pop.m_total:
+            raise ValueError(
+                f"data addresses {data.m} devices, population has "
+                f"{pop.m_total}")
+        self.exp = exp
+        self.data = data
+        params = init_linear(data.dim, data.n_classes,
+                             jax.random.PRNGKey(exp.seed))
+        flat0, self.unravel = jax.flatten_util.ravel_pytree(params)
+        self.d = flat0.shape[0]
+        self.params0 = params
+        self.scheme = get_scheme(exp.cfg, self.d, pop.k_cohort)
+        self.opt = Optimizer(name=exp.optimizer, lr=exp.lr)
+        self.xt, self.yt = jnp.asarray(x_test), jnp.asarray(y_test)
+        self.ctx = MACContext(
+            m=pop.k_cohort, fading=exp.cfg.fading, csi=self.scheme.csi,
+            use_kernel=exp.use_kernel or exp.cfg.use_kernel)
+        self.pstate0 = init_population(
+            pop, self.d, exp.steps, dtype=jnp.dtype(exp.cfg.state_dtype))
+        # traced per-round knobs — vmappable via with_overrides
+        self.avail_rate = jnp.float32(pop.avail_rate)
+        self.straggler_deadline = jnp.float32(pop.straggler_deadline)
+        self.k_active = jnp.float32(pop.k_cohort)
+        self.site_noise_scale = jnp.float32(pop.site_noise_scale)
+        self.backhaul_sigma2 = jnp.float32(pop.backhaul_sigma2)
+
+    def with_overrides(self, **attrs) -> "CompiledPopulation":
+        """Shallow copy with traced knobs replaced (the sweep hook)."""
+        new = copy.copy(self)
+        for name, value in attrs.items():
+            if name not in POP_OVERRIDE_ATTRS:
+                raise AttributeError(
+                    f"unknown population override {name!r}; traced knobs: "
+                    f"{POP_OVERRIDE_ATTRS}")
+            setattr(new, name, value)
+        return new
+
+    # ------------------------------------------------------------- pieces
+    def _carry0(self):
+        return (self.params0, self.opt.init(self.params0),
+                self.pstate0.banks)
+
+    def _round(self, sch: Scheme, carry, t, key):
+        params, opt_state, banks = carry
+        exp, pop, ps = self.exp, self.exp.pop, self.pstate0
+        avail = churn.availability(ps.arrival, ps.departure, t,
+                                   jax.random.fold_in(key, SALT_AVAIL),
+                                   self.avail_rate)
+        cohort, member, rank = sample_cohort(
+            jax.random.fold_in(key, SALT_SAMPLE), avail, pop.k_cohort)
+        lat = stragglers.latencies(jax.random.fold_in(key, SALT_LATENCY),
+                                   ps.speed[cohort])
+        mask = (member
+                & (rank.astype(jnp.float32) < self.k_active)
+                & stragglers.deadline_mask(lat, self.straggler_deadline))
+        xk, yk = self.data.cohort_batch(cohort)
+        grads, _ = device_grads(
+            params, self.unravel, xk, yk,
+            jnp.zeros((pop.k_cohort, self.d), jnp.float32),
+            local_steps=exp.local_steps, local_lr=exp.local_lr)
+        ghat, banks, met = population_round(
+            sch, banks, cohort, mask.astype(jnp.float32), grads, t, key,
+            self.ctx, pop.m_total, gains=ps.gains[cohort],
+            sites=ps.site[cohort], n_sites=pop.n_sites,
+            site_noise_scale=self.site_noise_scale,
+            backhaul_sigma2=self.backhaul_sigma2)
+        params, opt_state = self.opt.apply(params, self.unravel(ghat),
+                                           opt_state)
+        out = {"acc": accuracy(params, self.xt, self.yt),
+               "loss": ce_loss(params, self.xt, self.yt),
+               "metrics": met}
+        return (params, opt_state, banks), out
+
+    # ------------------------------------------------------- traced entry
+    def run(self, overrides: Dict[str, jnp.ndarray], keys: jnp.ndarray):
+        """One full run. Returns {"acc": (steps,), "loss": (steps,),
+        "metrics": {...: (steps,)}, "params": pytree}."""
+        pop_ov = {k: v for k, v in overrides.items()
+                  if k in POP_OVERRIDE_ATTRS}
+        sch_ov = {k: v for k, v in overrides.items()
+                  if k not in POP_OVERRIDE_ATTRS}
+        runner = self.with_overrides(**pop_ov) if pop_ov else self
+        sch = (self.scheme.with_overrides(**sch_ov) if sch_ov
+               else self.scheme)
+
+        def body(carry, inp):
+            t, key = inp
+            return runner._round(sch, carry, t, key)
+
+        carry, outs = jax.lax.scan(body, runner._carry0(),
+                                   (jnp.arange(self.exp.steps), keys))
+        outs["params"] = carry[0]
+        return outs
+
+
+def run_population(data: PopulationData, x_test, y_test, cfg: OTAConfig,
+                   pop: PopulationConfig, steps: int, lr: float = 1e-3,
+                   eval_every: int = 10, seed: int = 0,
+                   optimizer: str = "adam", local_steps: int = 1,
+                   local_lr: float = 0.1,
+                   use_kernel: bool = False) -> EngineRun:
+    """``run_compiled`` for populations: one jitted scan over sampled
+    cohorts.  At K == M_total with the churn/straggler defaults the run is
+    bitwise ``run_compiled`` on the same device tensors (the RNG layout
+    and MAC order match; pinned by tests/test_population.py)."""
+    exp = PopulationExperiment(cfg=cfg, pop=pop, steps=steps, lr=lr,
+                               eval_every=eval_every, optimizer=optimizer,
+                               local_steps=local_steps, local_lr=local_lr,
+                               seed=seed, use_kernel=use_kernel)
+    cp = CompiledPopulation(data, x_test, y_test, exp)
+    outs = jax.jit(cp.run)({}, round_keys(steps, seed))
+    outs = jax.tree.map(np.asarray, outs)
+    return _subsample(outs, exp)

@@ -1,0 +1,46 @@
+"""Deterministic (seed, t)-keyed cohort sampling.
+
+Each round draws K of the currently-available devices uniformly without
+replacement via the Gumbel-top-k trick: perturb every device with an iid
+Gumbel score, mask the unavailable ones to -inf, and take the K best.  The
+draw is a pure function of the round key (the engine passes
+``fold_in(round_key, SALT_SAMPLE)``), so it evaluates identically inside
+the compiled scan, under vmap, and in host-side reproductions.
+
+The cohort is returned *sorted by device id*.  That makes the K == M
+cohort exactly ``arange(M)``, so gathered data/keys/draws — and the MAC
+summation order — match the dense drivers bitwise (the parity golden).
+The pre-sort score rank of each cohort row is returned alongside: masking
+``rank >= k_active`` shrinks the effective cohort to the *top* k_active
+scores, which puts K on a vmappable sweep axis (the sampled analogue of
+``m_active``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_cohort(
+    key: jnp.ndarray, avail: jnp.ndarray, k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Draw K participants from the available devices.
+
+    avail: (M,) bool availability mask for this round.
+
+    Returns ``(cohort, member, rank)``: device ids (K,) int32 sorted
+    ascending; a bool mask marking rows that are genuinely available (when
+    fewer than K devices are up, the tail rows are unavailable fillers the
+    caller must mask out); and each row's score rank in [0, K).
+    """
+    m = avail.shape[0]
+    if not 0 < k <= m:
+        raise ValueError(f"need 0 < k <= M; got k={k}, M={m}")
+    score = jax.random.gumbel(key, (m,)) + jnp.where(avail, 0.0, -jnp.inf)
+    _, ids = jax.lax.top_k(score, k)
+    order = jnp.argsort(ids)
+    cohort = ids[order].astype(jnp.int32)
+    return cohort, avail[cohort], order.astype(jnp.int32)

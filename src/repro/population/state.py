@@ -1,0 +1,197 @@
+"""Banked, shard-addressed per-device state for M-large populations.
+
+The legacy drivers carry per-device state as dense ``(M, d)`` arrays, which
+caps M at a few dozen.  This module stores the population's persistent
+state — error-feedback accumulators, large-scale channel gains, compute
+speeds, arrival/departure traces, edge-site ids — in a
+:class:`PopulationState` pytree whose d-sized part is *banked*: a
+``(n_banks, bank_size, d)`` array addressed by ``slot = device_id % S``
+(``S = n_banks * bank_size`` slots), with gather/scatter cohort views so a
+round only ever touches ``(K, d)`` temporaries.
+
+Capacity is the memory knob: ``capacity == m_total`` (the default) gives
+every device its own slot — error feedback is exact, and a K == M cohort
+reproduces the dense drivers bitwise (the parity golden).  ``capacity <
+m_total`` turns the banks into a direct-mapped cache: devices that share a
+slot evict each other, and an evicted device restarts from the cold state
+``Delta = 0`` (exactly the accumulator a fresh device would carry — under
+sampled cohorts with rare revisits the lost residual is a second-order
+term, and peak memory drops to ``O(m_total * d / r)`` for an ``r``-fold
+capacity reduction).  An ``owner`` array detects cold slots on gather.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PopulationConfig:
+    """Static description of one device population.
+
+    ``m_total`` devices keep persistent state; each round samples a
+    ``k_cohort``-device cohort.  ``capacity`` (0 = ``m_total``) bounds the
+    banked error-feedback slots; ``bank_size`` sets the bank granularity.
+    The churn/straggler/hierarchy fields parameterise the availability,
+    latency, and edge-site models (``population/{churn,stragglers,
+    hierarchy}.py``); ``avail_rate`` / ``straggler_deadline`` and the two
+    site-noise scalars are *traced* per-round data, so the sweep engine can
+    vmap grids over them (docs/DESIGN.md §9).
+    """
+
+    m_total: int
+    k_cohort: int
+    bank_size: int = 256
+    capacity: int = 0  # 0 => one slot per device (exact error feedback)
+    # churn: arrival/departure trace + per-round Bernoulli availability
+    arrival_spread: float = 0.0  # fraction of the run over which devices arrive
+    mean_lifetime: float = 0.0  # mean rounds before departure; 0 => immortal
+    avail_rate: float = 1.0  # per-round availability probability (traced)
+    # stragglers: lognormal compute speeds, exponential latency, deadline
+    speed_sigma: float = 0.0  # lognormal sigma of per-device slowdown
+    straggler_deadline: float = float("inf")  # round deadline (traced)
+    # large-scale channel gains (received-power factors, static per device)
+    shadowing_sigma_db: float = 0.0
+    # hierarchy: devices -> edge-site partial OTA sums -> backhaul combine
+    n_sites: int = 1
+    site_noise_scale: float = 1.0  # per-site AWGN variance scale (traced)
+    backhaul_sigma2: float = 0.0  # inter-site combine noise (traced)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0 < self.k_cohort <= self.m_total:
+            raise ValueError(
+                f"k_cohort must be in (0, m_total]; got K={self.k_cohort}, "
+                f"M={self.m_total}"
+            )
+        if self.capacity < 0 or self.bank_size <= 0 or self.n_sites <= 0:
+            raise ValueError("capacity/bank_size/n_sites must be positive")
+
+    @property
+    def state_capacity(self) -> int:
+        return self.capacity or self.m_total
+
+    @property
+    def n_banks(self) -> int:
+        return -(-self.state_capacity // self.bank_size)
+
+
+class BankedState(NamedTuple):
+    """Direct-mapped banked store of per-device ``(d,)`` vectors."""
+
+    deltas: jnp.ndarray  # (n_banks, bank_size, d) error accumulators
+    owner: jnp.ndarray  # (n_banks, bank_size) int32 device id, -1 = empty
+
+
+class PopulationState(NamedTuple):
+    """The whole population's persistent state, as a pytree.
+
+    Only ``banks`` evolves round to round (it rides the scan carry); the
+    remaining ``(M,)`` scalar fields are drawn once per run.
+    """
+
+    banks: BankedState
+    gains: jnp.ndarray  # (M,) large-scale received-power factors
+    speed: jnp.ndarray  # (M,) compute slowdown factors (>= 0)
+    arrival: jnp.ndarray  # (M,) int32 first round the device exists
+    departure: jnp.ndarray  # (M,) int32 first round after it leaves
+    site: jnp.ndarray  # (M,) int32 edge-site assignment
+
+
+#: departure round of an immortal device (any int32 far above any horizon)
+NEVER = 1 << 30
+
+
+def init_banks(
+    capacity: int, bank_size: int, d: int, dtype=jnp.float32
+) -> BankedState:
+    """All-cold banks: ``ceil(capacity / bank_size)`` banks, owner = -1."""
+    n_banks = -(-capacity // bank_size)
+    return BankedState(
+        deltas=jnp.zeros((n_banks, bank_size, d), jnp.dtype(dtype)),
+        owner=jnp.full((n_banks, bank_size), -1, jnp.int32),
+    )
+
+
+def _address(banks: BankedState, cohort: jnp.ndarray):
+    """(bank, slot) coordinates of each cohort device (direct-mapped)."""
+    bank_size = banks.owner.shape[1]
+    n_slots = banks.owner.size
+    slot = cohort.astype(jnp.int32) % n_slots
+    return slot // bank_size, slot % bank_size
+
+
+def gather_cohort(banks: BankedState, cohort: jnp.ndarray) -> jnp.ndarray:
+    """(K, d) cohort view of the banked state; cold slots read as zeros.
+
+    A slot is *live* for a device iff the owner tag matches its id — a
+    fresh or evicted device reads the cold state ``Delta = 0`` (the
+    accumulator every device starts from, so capacity == m_total is exact
+    and smaller capacities degrade gracefully)."""
+    b, s = _address(banks, cohort)
+    live = banks.owner[b, s] == cohort.astype(jnp.int32)
+    return jnp.where(live[:, None], banks.deltas[b, s], 0.0)
+
+
+def scatter_cohort(
+    banks: BankedState, cohort: jnp.ndarray, new_deltas: jnp.ndarray
+) -> BankedState:
+    """Write the cohort's updated accumulators back (claiming ownership).
+
+    With capacity < m_total two cohort devices can collide on one slot; the
+    lowest device id wins deterministically (later writers drop), so the
+    update is well-defined regardless of XLA's scatter order."""
+    b, s = _address(banks, cohort)
+    k = cohort.shape[0]
+    i = jnp.arange(k)
+    dup = (b[:, None] == b[None, :]) & (s[:, None] == s[None, :]) & (
+        i[:, None] > i[None, :]
+    )
+    keep = ~jnp.any(dup, axis=1)
+    # dropped rows are routed out of range and discarded by mode="drop"
+    b = jnp.where(keep, b, banks.owner.shape[0])
+    return BankedState(
+        deltas=banks.deltas.at[b, s].set(
+            new_deltas.astype(banks.deltas.dtype), mode="drop"
+        ),
+        owner=banks.owner.at[b, s].set(cohort.astype(jnp.int32), mode="drop"),
+    )
+
+
+def init_population(
+    pop: PopulationConfig,
+    d: int,
+    steps: int,
+    dtype=jnp.float32,
+    key: Optional[jnp.ndarray] = None,
+) -> PopulationState:
+    """Draw the run-level per-device arrays and allocate cold banks.
+
+    ``steps`` anchors the arrival trace: a fraction ``arrival_spread`` of
+    the run is the window over which devices first appear."""
+    from repro.population import churn, hierarchy, stragglers
+
+    if key is None:
+        key = jax.random.PRNGKey(pop.seed)
+    m = pop.m_total
+    k_gain, k_speed, k_churn = jax.random.split(key, 3)
+    if pop.shadowing_sigma_db > 0:
+        db = pop.shadowing_sigma_db * jax.random.normal(k_gain, (m,))
+        gains = jnp.power(10.0, db / 10.0)
+    else:
+        gains = jnp.ones((m,))
+    arrival, departure = churn.init_arrival_departure(
+        k_churn, m, steps, pop.arrival_spread, pop.mean_lifetime
+    )
+    return PopulationState(
+        banks=init_banks(pop.state_capacity, pop.bank_size, d, dtype),
+        gains=gains,
+        speed=stragglers.init_speed(k_speed, m, pop.speed_sigma),
+        arrival=arrival,
+        departure=departure,
+        site=jnp.asarray(hierarchy.site_assignment(m, pop.n_sites)),
+    )

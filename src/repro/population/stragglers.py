@@ -1,0 +1,35 @@
+"""Straggler model: per-device compute latency with a deadline cutoff.
+
+Device m's round latency is ``speed_m * Exp(1)`` — a static lognormal
+slowdown factor (drawn once per run, heavy-tailed across the population)
+times a per-round exponential draw (contention/jitter).  Devices that miss
+``straggler_deadline`` are dropped from the cohort mask, so they silently
+fall out of the MAC sum exactly like deep-faded devices (their error state
+keeps the round's update; see ``round_masked``).
+
+The deadline enters as a traced compare, so it is a vmappable sweep axis;
+at the default ``inf`` every finite latency passes — the compare is always
+true, preserving the K == M bitwise parity path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_speed(key: jnp.ndarray, m: int, speed_sigma: float) -> jnp.ndarray:
+    """(M,) lognormal slowdown factors; sigma = 0 means all-equal (1.0)."""
+    if speed_sigma <= 0:
+        return jnp.ones((m,))
+    return jnp.exp(speed_sigma * jax.random.normal(key, (m,)))
+
+
+def latencies(key: jnp.ndarray, speed: jnp.ndarray) -> jnp.ndarray:
+    """Per-round compute latencies for the given (cohort) speed factors."""
+    return speed * jax.random.exponential(key, speed.shape)
+
+
+def deadline_mask(lat: jnp.ndarray, deadline) -> jnp.ndarray:
+    """(K,) bool: which devices finished before the (traced) deadline."""
+    return lat <= jnp.asarray(deadline, lat.dtype)

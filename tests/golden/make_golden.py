@@ -21,7 +21,10 @@ from tests.golden.parity_cases import PARITY_CASES  # noqa: E402
 
 
 def main() -> None:
-    from repro.core.schemes import get_scheme, round_simulated
+    from repro.core.schemes import MACContext, get_scheme, round_simulated
+    from repro.population import (
+        gather_cohort, init_banks, population_round,
+    )
 
     D, M = 256, 6
     base = jax.random.normal(jax.random.PRNGKey(7), (D,))
@@ -36,6 +39,22 @@ def main() -> None:
         out[f"{name}__ghat"] = np.asarray(ghat)
         out[f"{name}__deltas"] = np.asarray(nd)
         print(f"{name:16s} ghat[:3] = {np.asarray(ghat)[:3]}")
+
+    # the sampled-cohort pin: a K == M cohort through the banked population
+    # round (bank_size 4 -> 2 banks, exercising the banked addressing) must
+    # reproduce a_dsgd_dense bitwise — the equality is asserted separately
+    # by tests/test_population.py, like the a_dsgd_csi_err0 pin
+    cfg = PARITY_CASES["a_dsgd_dense"]
+    scheme = get_scheme(cfg, D, M)
+    ctx = MACContext(m=M, fading=cfg.fading, csi=scheme.csi)
+    cohort = jnp.arange(M, dtype=jnp.int32)
+    ghat, banks, _ = population_round(
+        scheme, init_banks(M, 4, D), cohort, jnp.ones((M,), jnp.float32),
+        grads, 0, jax.random.PRNGKey(11), ctx, M)
+    out["population_full__ghat"] = np.asarray(ghat)
+    out["population_full__deltas"] = np.asarray(gather_cohort(banks, cohort))
+    print(f"{'population_full':16s} ghat[:3] = {np.asarray(ghat)[:3]}")
+
     path = os.path.join(os.path.dirname(__file__), "simulated_parity.npz")
     np.savez(path, **out)
     print(f"wrote {path}")

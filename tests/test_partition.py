@@ -4,7 +4,8 @@ import pytest
 
 from repro.data.partition import (
     label_bias, label_shard_assignment, make_partition, partition_dirichlet,
-    partition_iid, partition_label_shards,
+    partition_iid, partition_label_shards, population_label_bias,
+    population_partition,
 )
 from repro.data.synthetic import federated_split, make_classification
 
@@ -97,6 +98,71 @@ def test_make_partition_kinds_and_errors(data):
         assert xd.shape == (M, B, x.shape[1]) and yd.shape == (M, B)
     with pytest.raises(ValueError, match="unknown partition kind"):
         make_partition(x, y, M, B, kind="quantum")
+
+
+# ---------------------------------------------------------------------------
+# population-scale arithmetic partitions (no (M, B) table)
+# ---------------------------------------------------------------------------
+
+
+def test_population_iid_covers_pool_and_scales_to_1e5(data):
+    x, y = data
+    n = len(y)
+    # m*b == n: the windows tile one shuffled epoch exactly (disjoint cover)
+    part = population_partition(y, m=n // B, b=B, kind="iid", seed=0)
+    idx = np.asarray(part.sample_indices(np.arange(n // B)))
+    assert idx.shape == (n // B, B)
+    assert len(np.unique(idx)) == n
+    # M = 1e5 over the same pool: O(N) state only, cohort rows on demand
+    big = population_partition(y, m=100_000, b=B, kind="iid", seed=0)
+    assert big.order.shape == (n,)
+    cohort = np.asarray([0, 7, 99_999])
+    rows = np.asarray(big.sample_indices(cohort))
+    assert rows.shape == (3, B)
+    assert rows.min() >= 0 and rows.max() < n
+    # device m's window is reproducible arithmetic on the one permutation
+    np.testing.assert_array_equal(
+        rows[2], big.order[(99_999 * B + np.arange(B)) % n])
+
+
+def test_population_label_shards_matches_device_classes(data):
+    x, y = data
+    part = population_partition(y, m=50_000, b=B, kind="label_shards",
+                                shards_per_device=2, seed=1)
+    for dev in (0, 3, 777, 49_999):
+        classes = part.device_labels(dev)
+        assert len(set(classes.tolist())) == 2  # spd distinct classes
+        got = y[np.asarray(part.sample_indices(np.asarray([dev])))[0]]
+        assert set(np.unique(got)) == set(classes.tolist())
+        counts = np.bincount(got, minlength=C)
+        assert counts[classes[0]] == counts[classes[1]] == B // 2
+
+
+def test_population_label_bias_consistent_under_subsampling(data):
+    x, y = data
+    part = population_partition(y, m=2000, b=B, kind="label_shards",
+                                shards_per_device=2, seed=0)
+    full = population_label_bias(part, y, n_classes=C)
+    # subsample at random — a strided subsample would alias with the
+    # class-cycling period and see a collapsed class marginal
+    devices = np.random.default_rng(0).choice(2000, 200, replace=False)
+    sample = population_label_bias(part, y, devices=devices, n_classes=C)
+    assert full == pytest.approx(sample, abs=0.02)
+    assert full > 0.5  # two-class devices are heavily biased
+    iid_part = population_partition(y, m=2000, b=B, kind="iid", seed=0)
+    assert population_label_bias(iid_part, y, n_classes=C) < full
+
+
+def test_population_partition_rejects_bad_configs(data):
+    x, y = data
+    with pytest.raises(ValueError, match="shards_per_device <= "):
+        population_partition(y, m=10, b=B, kind="label_shards",
+                             shards_per_device=C + 1)
+    with pytest.raises(ValueError, match=r"shards_per_device \| b"):
+        population_partition(y, m=10, b=B + 1, kind="label_shards",
+                             shards_per_device=2)
+    with pytest.raises(ValueError, match="dirichlet|unknown"):
+        population_partition(y, m=10, b=B, kind="dirichlet")
 
 
 def test_federated_split_delegates(data):

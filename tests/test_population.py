@@ -1,0 +1,340 @@
+"""Population engine: banked state, sampling, churn, stragglers, hierarchy.
+
+The acceptance bar mirrors the engine's: a K == M cohort through the banked
+population round must be *bitwise* the dense drivers (pinned by the
+``population_full`` golden and by full-run parity with ``run_compiled``);
+everything beyond that — cohort sampling, eviction, deadlines, edge sites —
+is tested against its own contract.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OTAConfig
+from repro.core.schemes import MACContext, get_scheme
+from repro.data.partition import population_partition
+from repro.data.synthetic import federated_split, make_classification
+from repro.experiments import run_compiled, run_population_sweep
+from repro.population import (
+    CompiledPopulation, PopulationConfig, PopulationData,
+    PopulationExperiment, gather_cohort, init_banks, population_round,
+    run_population, sample_cohort, scatter_cohort, site_mac_sum,
+)
+from repro.population import churn, stragglers
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tests.golden.parity_cases import PARITY_CASES  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "simulated_parity.npz")
+STEPS, M, B = 6, 4, 64
+
+
+@pytest.fixture(scope="module")
+def data():
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=800, n_test=300, dim=48, noise=2.0, seed=3)
+    xd, yd = federated_split(xtr, ytr, m=M, b=B, iid=True, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+def _adsgd(**kw):
+    base = dict(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                total_steps=STEPS, projection="dense", amp_iters=6,
+                mean_removal_steps=2)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity with the dense drivers
+# ---------------------------------------------------------------------------
+
+
+def test_population_round_full_cohort_matches_golden():
+    """K == M through the banked round == the a_dsgd_dense golden, bitwise.
+
+    bank_size 4 over M = 6 devices forces a 2-bank layout, so the gather /
+    scatter addressing is genuinely exercised, not an identity."""
+    g = np.load(GOLDEN)
+    grads = jnp.asarray(g["grads"])
+    m, d = grads.shape
+    cfg = PARITY_CASES["a_dsgd_dense"]
+    scheme = get_scheme(cfg, d, m)
+    ctx = MACContext(m=m, fading=cfg.fading, csi=scheme.csi)
+    cohort = jnp.arange(m, dtype=jnp.int32)
+    ghat, banks, met = population_round(
+        scheme, init_banks(m, 4, d), cohort, jnp.ones((m,), jnp.float32),
+        grads, 0, jax.random.PRNGKey(11), ctx, m)
+    np.testing.assert_array_equal(np.asarray(ghat), g["population_full__ghat"])
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, cohort)),
+                                  g["population_full__deltas"])
+    # and the population pin itself equals the dense-driver pin
+    np.testing.assert_array_equal(g["population_full__ghat"],
+                                  g["a_dsgd_dense__ghat"])
+    np.testing.assert_array_equal(g["population_full__deltas"],
+                                  g["a_dsgd_dense__deltas"])
+    assert float(met["cohort_frac"]) == 1.0
+
+
+def test_run_population_k_equals_m_matches_run_compiled(data):
+    """Full-population sampling (K == M, no churn/stragglers) == the dense
+    compiled engine, entry for entry."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd()
+    pop = PopulationConfig(m_total=M, k_cohort=M, bank_size=3)
+    ref = run_compiled(xd, yd, xte, yte, cfg, steps=STEPS, lr=1e-3,
+                       eval_every=2)
+    eng = run_population(PopulationData.from_dense(xd, yd), xte, yte, cfg,
+                         pop, steps=STEPS, lr=1e-3, eval_every=2)
+    assert eng.accs == ref.accs
+    assert eng.losses == ref.losses
+
+
+# ---------------------------------------------------------------------------
+# banked state
+# ---------------------------------------------------------------------------
+
+
+def test_banks_cold_gather_is_zero_and_roundtrips():
+    banks = init_banks(8, 4, 3)
+    cohort = jnp.asarray([1, 5, 6], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, cohort)),
+                                  np.zeros((3, 3)))
+    vals = jnp.arange(9.0).reshape(3, 3)
+    banks = scatter_cohort(banks, cohort, vals)
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, cohort)),
+                                  np.asarray(vals))
+    # untouched devices still read cold
+    np.testing.assert_array_equal(
+        np.asarray(gather_cohort(banks, jnp.asarray([0, 2], jnp.int32))),
+        np.zeros((2, 3)))
+
+
+def test_banks_capacity_below_m_evicts_to_cold_state():
+    """Direct-mapped eviction: device 9 claims device 1's slot (9 mod 8),
+    and device 1 subsequently reads the cold state, not stale data."""
+    banks = init_banks(8, 4, 2)
+    one = jnp.asarray([1], jnp.int32)
+    nine = jnp.asarray([9], jnp.int32)
+    banks = scatter_cohort(banks, one, jnp.full((1, 2), 7.0))
+    banks = scatter_cohort(banks, nine, jnp.full((1, 2), 3.0))
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, nine)),
+                                  np.full((1, 2), 3.0))
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, one)),
+                                  np.zeros((1, 2)))
+
+
+def test_banks_duplicate_slot_write_is_lowest_id_deterministic():
+    """Two cohort devices colliding on one slot: the lowest id wins, no
+    matter the cohort order XLA scatters in."""
+    cohort = jnp.asarray([1, 9], jnp.int32)  # both -> slot 1 of 8
+    vals = jnp.asarray([[5.0], [11.0]])
+    banks = scatter_cohort(init_banks(8, 8, 1), cohort, vals)
+    assert int(banks.owner[0, 1]) == 1
+    assert float(banks.deltas[0, 1, 0]) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# sampler / churn / stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_sorted_deterministic_and_full_cohort_is_arange():
+    key = jax.random.PRNGKey(3)
+    avail = jnp.ones((50,), bool)
+    cohort, member, rank = sample_cohort(key, avail, 8)
+    cohort2, _, _ = sample_cohort(key, avail, 8)
+    np.testing.assert_array_equal(np.asarray(cohort), np.asarray(cohort2))
+    assert np.all(np.diff(np.asarray(cohort)) > 0)  # sorted, no repeats
+    assert bool(member.all())
+    assert sorted(np.asarray(rank).tolist()) == list(range(8))
+    full, _, _ = sample_cohort(key, avail, 50)
+    np.testing.assert_array_equal(np.asarray(full), np.arange(50))
+
+
+def test_sampler_respects_availability():
+    avail = jnp.zeros((40,), bool).at[10:20].set(True)
+    for s in range(5):
+        cohort, member, _ = sample_cohort(jax.random.PRNGKey(s), avail, 5)
+        assert bool(member.all())
+        assert np.all((np.asarray(cohort) >= 10) & (np.asarray(cohort) < 20))
+    # fewer available than K: the filler rows are flagged out
+    cohort, member, _ = sample_cohort(jax.random.PRNGKey(0), avail, 15)
+    assert int(member.sum()) == 10
+    assert np.all(np.asarray(cohort)[np.asarray(member)] >= 10)
+
+
+def test_churn_window_and_rate():
+    key = jax.random.PRNGKey(0)
+    arrival, departure = churn.init_arrival_departure(
+        key, 200, steps=100, arrival_spread=0.5, mean_lifetime=20.0)
+    arr, dep = np.asarray(arrival), np.asarray(departure)
+    assert arr.min() >= 0 and arr.max() < 50  # spread over half the run
+    assert np.all(dep > arr)  # min lifetime 1 round
+    a0 = churn.availability(arrival, departure, 0, key, 1.0)
+    np.testing.assert_array_equal(np.asarray(a0), arr <= 0)
+    late = churn.availability(arrival, departure, 10**6, key, 1.0)
+    assert not bool(late.any())  # everyone has departed
+    none = churn.availability(arrival, departure, 0, key, 0.0)
+    assert not bool(none.any())
+    # defaults: immortal, always up
+    arrival, departure = churn.init_arrival_departure(key, 50, steps=100)
+    assert bool(churn.availability(arrival, departure, 99, key, 1.0).all())
+
+
+def test_straggler_deadline_and_defaults():
+    key = jax.random.PRNGKey(1)
+    assert np.all(np.asarray(stragglers.init_speed(key, 10, 0.0)) == 1.0)
+    speed = stragglers.init_speed(key, 1000, 1.0)
+    lat = stragglers.latencies(key, speed)
+    assert bool(stragglers.deadline_mask(lat, float("inf")).all())
+    frac = float(stragglers.deadline_mask(lat, 0.5).mean())
+    assert 0.0 < frac < 1.0  # a finite deadline drops a real fraction
+
+
+def test_straggler_deadline_shrinks_cohort_in_engine(data):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd()
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M, speed_sigma=0.5,
+                          straggler_deadline=0.3)
+    eng = run_population(pdata, xte, yte, cfg, pop, steps=STEPS,
+                         eval_every=2)
+    fracs = [m["cohort_frac"] for m in eng.metrics]
+    assert min(fracs) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# hierarchy
+# ---------------------------------------------------------------------------
+
+
+def test_site_mac_sum_noiseless_equals_flat_sum():
+    key = jax.random.PRNGKey(5)
+    frames = jax.random.normal(key, (12, 30))
+    sites = jnp.asarray(np.arange(12) % 3, jnp.int32)
+    y = site_mac_sum(frames, sites, 3, key, 0.0, backhaul_sigma2=0.0)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.sum(frames, axis=0)),
+                               rtol=1e-6)
+
+
+def test_site_mac_noise_grows_with_sites():
+    key = jax.random.PRNGKey(6)
+    frames = jnp.zeros((12, 4000))
+    var = {}
+    for n_sites in (1, 4):
+        sites = jnp.asarray(np.arange(12) % n_sites, jnp.int32)
+        y = site_mac_sum(frames, sites, n_sites, key, 1.0)
+        var[n_sites] = float(jnp.var(y))
+    assert var[4] > 2.5 * var[1]  # ~n_sites-fold effective noise
+
+
+def test_hierarchical_run_executes_and_differs_from_flat(data):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd()
+    pdata = PopulationData.from_dense(xd, yd)
+    flat = run_population(pdata, xte, yte, cfg,
+                          PopulationConfig(m_total=M, k_cohort=M),
+                          steps=STEPS, eval_every=2)
+    hier = run_population(pdata, xte, yte, cfg,
+                          PopulationConfig(m_total=M, k_cohort=M, n_sites=2),
+                          steps=STEPS, eval_every=2)
+    assert hier.losses != flat.losses  # extra per-site receiver noise
+    assert all(np.isfinite(hier.losses))
+
+
+# ---------------------------------------------------------------------------
+# sweep integration + overrides
+# ---------------------------------------------------------------------------
+
+
+def test_population_sweep_default_point_matches_base_run(data):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd()
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M)
+    base = run_population(pdata, xte, yte, cfg, pop, steps=STEPS,
+                          eval_every=2)
+    res = run_population_sweep(
+        pdata, (xte, yte), cfg, pop,
+        {"straggler_deadline": [float("inf"), 0.2],
+         "avail_rate": [1.0, 0.5]},
+        steps=STEPS, eval_every=2)
+    default = [r for r in res.records
+               if r["straggler_deadline"] == float("inf")
+               and r["avail_rate"] == 1.0]
+    assert len(default) == 1
+    # accs bitwise, losses to the ULP — the vmapped loss reduction can
+    # reassociate (the dense sweep tests pin the same contract)
+    assert default[0]["accs"] == base.accs
+    np.testing.assert_allclose(default[0]["losses"], base.losses, rtol=1e-6)
+    # the degraded points genuinely shrink participation
+    hit = [r for r in res.records if r["straggler_deadline"] == 0.2]
+    assert all(min(m["cohort_frac"] for m in r["metrics"]) < 1.0
+               for r in hit)
+
+
+def test_population_sweep_k_active_axis(data):
+    (xd, yd), (xte, yte) = data
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M)
+    res = run_population_sweep(pdata, (xte, yte), _adsgd(), pop,
+                               {"k_active": [M, M // 2]},
+                               steps=STEPS, eval_every=2)
+    fracs = {r["k_active"]: r["metrics"][0]["cohort_frac"]
+             for r in res.records}
+    assert fracs[M] == 1.0
+    assert fracs[M // 2] == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="k_active"):
+        run_population_sweep(pdata, (xte, yte), _adsgd(), pop,
+                             {"k_active": [M + 1]}, steps=STEPS)
+    with pytest.raises(KeyError, match="m_active"):
+        run_population_sweep(pdata, (xte, yte), _adsgd(), pop,
+                             {"m_active": [M]}, steps=STEPS)
+
+
+def test_unknown_population_override_raises(data):
+    (xd, yd), (xte, yte) = data
+    exp = PopulationExperiment(cfg=_adsgd(),
+                               pop=PopulationConfig(m_total=M, k_cohort=M),
+                               steps=STEPS)
+    cp = CompiledPopulation(PopulationData.from_dense(xd, yd), xte, yte, exp)
+    with pytest.raises(AttributeError, match="unknown population override"):
+        cp.with_overrides(bank_size=jnp.float32(4))
+
+
+# ---------------------------------------------------------------------------
+# scale: M = 1e5 with banked memory law
+# ---------------------------------------------------------------------------
+
+
+def test_population_scale_1e5_runs_with_banked_memory():
+    """M = 10^5 devices, K = 16 cohort, capacity 2048: the run executes as
+    one scan and the persistent d-sized state is ~capacity-sized, nearly
+    50x below the dense (M, d) footprint."""
+    m_total, k, cap = 100_000, 16, 2048
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=2000, n_test=400, dim=16, n_classes=4, noise=2.0, seed=0)
+    part = population_partition(ytr, m=m_total, b=32, kind="iid", seed=0)
+    pdata = PopulationData.from_pool(xtr, ytr, part)
+    pop = PopulationConfig(m_total=m_total, k_cohort=k, capacity=cap,
+                          bank_size=256, avail_rate=0.9, speed_sigma=0.5,
+                          straggler_deadline=5.0)
+    cfg = OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                    total_steps=3, projection="dense", amp_iters=4,
+                    mean_removal_steps=1)
+    exp = PopulationExperiment(cfg=cfg, pop=pop, steps=3, eval_every=1)
+    cp = CompiledPopulation(pdata, xte, yte, exp)
+    d = cp.d
+    banks = cp.pstate0.banks
+    assert banks.deltas.shape == (cap // 256, 256, d)
+    assert banks.deltas.nbytes < m_total * d * 4 / 10  # the memory law
+    eng = run_population(pdata, xte, yte, cfg, pop, steps=3, eval_every=1)
+    assert len(eng.accs) == 3
+    assert all(np.isfinite(eng.losses))
