@@ -1,7 +1,7 @@
 """CI benchmark regression gate: fail on >RATIO x slowdown vs a baseline.
 
 Usage:
-    python benchmarks/check_regression.py BASELINE.json FRESH.json
+    python benchmarks/check_regression.py [--strict] BASELINE.json FRESH.json
 
 Compares a freshly generated ``BENCH_kernels.json`` / ``BENCH_sweeps.json``
 against the committed baseline and exits non-zero if any comparable timing
@@ -13,9 +13,13 @@ Speed-ups and new entries are reported but never fail the gate; baseline
 entries missing from the fresh file are *skipped with a warning* (a renamed
 or retired benchmark is a review concern, not a perf regression — and a
 newly landed bench file starts gating as soon as its baseline is
-committed).  Compile-dominated timings (``UNGATED``) are excluded from
-gating entirely — XLA trace+compile wall-clock varies across machines far
-beyond runner noise.
+committed).  ``--strict`` (on in CI) additionally fails when a non-empty
+baseline matches *nothing* in the fresh file: a wholesale mismatch means
+the benchmark schema or naming drifted, and the gate was silently
+vacuous — every timing "passed" because none was compared.
+Compile-dominated timings (``UNGATED``) are excluded from gating
+entirely — XLA trace+compile wall-clock varies across machines far beyond
+runner noise.
 """
 
 from __future__ import annotations
@@ -46,12 +50,13 @@ def sweep_timings(doc: dict) -> dict:
     }
 
 
-def compare(baseline: dict, fresh: dict) -> int:
+def compare(baseline: dict, fresh: dict, strict: bool = False) -> int:
     if "entries" in baseline:
         base_t, fresh_t = kernel_timings(baseline), kernel_timings(fresh)
     else:
         base_t, fresh_t = sweep_timings(baseline), sweep_timings(fresh)
     failures = 0
+    matched = 0
     for key in sorted(base_t, key=str):
         if key not in fresh_t:
             print(
@@ -59,6 +64,7 @@ def compare(baseline: dict, fresh: dict) -> int:
                 "skipped (retired or renamed benchmark?)"
             )
             continue
+        matched += 1
         b, f = base_t[key], fresh_t[key]
         ratio = f / b if b > 0 else float("inf")
         tag = "ok"
@@ -70,10 +76,21 @@ def compare(baseline: dict, fresh: dict) -> int:
         print(f"  {tag:10s} {key}: {b:.1f} -> {f:.1f} us ({ratio:.2f}x)")
     for key in sorted(set(fresh_t) - set(base_t), key=str):
         print(f"  new        {key}: {fresh_t[key]:.1f} us (no baseline)")
+    if strict and base_t and matched == 0:
+        print(
+            f"  STRICT     none of the {len(base_t)} baseline entr"
+            f"{'y' if len(base_t) == 1 else 'ies'} matched the fresh file "
+            "— the gate compared nothing (schema or naming drift?)"
+        )
+        failures += 1
     return failures
 
 
 def main(argv) -> int:
+    argv = list(argv)
+    strict = "--strict" in argv
+    if strict:
+        argv.remove("--strict")
     if len(argv) != 3:
         print(__doc__)
         return 2
@@ -81,10 +98,14 @@ def main(argv) -> int:
         baseline = json.load(fh)
     with open(argv[2]) as fh:
         fresh = json.load(fh)
-    print(f"benchmark regression gate: threshold {RATIO}x ({argv[1]} vs {argv[2]})")
-    failures = compare(baseline, fresh)
+    mode = " [strict]" if strict else ""
+    print(
+        f"benchmark regression gate: threshold {RATIO}x{mode} "
+        f"({argv[1]} vs {argv[2]})"
+    )
+    failures = compare(baseline, fresh, strict=strict)
     if failures:
-        print(f"FAILED: {failures} timing(s) regressed beyond {RATIO}x")
+        print(f"FAILED: {failures} check(s) failed (threshold {RATIO}x)")
         return 1
     print("ok: no timing regressed beyond the threshold")
     return 0

@@ -19,7 +19,8 @@ def main() -> None:
     from benchmarks import (bench_kernels, bench_sweeps, convergence_bound,
                             fig2_schemes, fig3_power_alloc, fig4_power_sweep,
                             fig5_bandwidth, fig6_devices, fig7_s_tradeoff,
-                            fig8_bias, fig9_fading, fig10_scaling, roofline)
+                            fig8_bias, fig9_fading, fig10_scaling,
+                            fig11_robust, roofline)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "fig2": fig2_schemes.main,
@@ -31,6 +32,7 @@ def main() -> None:
         "fig8": fig8_bias.main,
         "fig9": fig9_fading.main,
         "fig10": fig10_scaling.main,
+        "fig11": fig11_robust.main,
         "thm1": convergence_bound.main,
         "roofline": roofline.main,
         "kernels": bench_kernels.main,

@@ -196,6 +196,27 @@ class OTAConfig:
     fading_window: int = 64        # gauss_markov moving-average window W
     csi_err_var: float = 0.0       # CSI estimate error variance (a_dsgd_csi_err)
     ps_antennas: int = 32          # K PS receive antennas (a_dsgd_blind)
+    # robustness axis (repro.robust): fault injection + robust aggregation.
+    # Defaults are bitwise-neutral: with ``robust=False`` and the zero rates
+    # below, no new op enters the traced program (static gating), so every
+    # pre-existing golden stays byte-identical.  ``robust=True`` (set
+    # explicitly, or auto-promoted by the sweep engine when a robust axis is
+    # swept) compiles the fault-injection path; the *rates* then enter the
+    # round as traced scalars, so whole fault grids vmap on one program
+    # (``ROBUST_VMAP_AXES`` in repro.experiments.sweep).
+    robust: bool = False           # static master switch for fault injection
+    byzantine_frac: float = 0.0    # persistent Byzantine fraction (traced)
+    byz_attack: str = "sign_flip"  # static attack shape: sign_flip | scale
+    byz_scale: float = 10.0        # attack magnitude (traced)
+    fault_rate: float = 0.0        # per-round transient fault prob (traced)
+    fault_kind: str = "nan"        # static: nan | inf | stale | dropout
+    erasure_prob: float = 0.0      # digital packet-erasure prob (traced)
+    # robust aggregation (independent of fault injection; static gates)
+    aggregator: str = "mean"       # mean | trimmed_mean | median | norm_cap
+    trim_frac: float = 0.1         # per-side trim fraction (traced)
+    norm_cap: float = 1.0          # per-frame L2 cap, norm_cap agg (traced)
+    clip_power: bool = False       # static: analog transmit-side power cap
+    power_cap: float = 1.5         # cap as a multiple of P_t (traced)
 
     def s_for(self, d: int) -> int:
         return max(2, int(self.s_frac * d))

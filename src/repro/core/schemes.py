@@ -66,6 +66,7 @@ from repro.core import channel, compression, fading, power
 from repro.core.amp import amp_decode
 from repro.core.projection import DenseProjector, make_projector
 from repro.kernels import ops, ref
+from repro.robust import faults
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +216,19 @@ class Scheme:
         self.fading_rho = jnp.float32(cfg.fading_rho)
         #: run-level key anchoring the static / gauss_markov gain streams
         self.fading_key = fading.fading_base_key(cfg.seed)
+        # robustness scalars: like the channel scalars above, these enter
+        # the round as data, so fault/defence grids vmap on one program
+        # (ROBUST_VMAP_AXES in repro.experiments.sweep); the *kinds*
+        # (byz_attack / fault_kind / aggregator / clip_power) are static
+        self.byzantine_frac = jnp.float32(cfg.byzantine_frac)
+        self.byz_scale = jnp.float32(cfg.byz_scale)
+        self.fault_rate = jnp.float32(cfg.fault_rate)
+        self.erasure_prob = jnp.float32(cfg.erasure_prob)
+        self.trim_frac = jnp.float32(cfg.trim_frac)
+        self.norm_cap = jnp.float32(cfg.norm_cap)
+        self.power_cap = jnp.float32(cfg.power_cap)
+        #: run-level key anchoring the persistent Byzantine membership
+        self.fault_key = faults.fault_base_key(cfg.seed)
 
     # ------------------------------------------------------------- state
     def init_state(self, d: Optional[int] = None) -> jnp.ndarray:
@@ -312,8 +326,42 @@ class Scheme:
 
     def silent_state(self, g: jnp.ndarray, state: jnp.ndarray,
                      new_state: jnp.ndarray) -> jnp.ndarray:
-        """Error state of a non-participating (deep-fade) device."""
+        """Error state of a non-participating (deep-fade / dropout) device."""
         return new_state
+
+    # ------------------------------------------------------ fault hooks
+    @property
+    def robust_on(self) -> bool:
+        """Static gate for the fault-injection path: the robust master
+        switch, or any nonzero *configured* fault rate (a swept rate axis
+        rides ``robust=True`` — the sweep engine auto-promotes it)."""
+        cfg = self.cfg
+        return bool(cfg.robust or cfg.byzantine_frac > 0
+                    or cfg.fault_rate > 0 or cfg.erasure_prob > 0)
+
+    def fault_draw(self, key: jnp.ndarray, step, m: int) -> faults.FaultDraw:
+        """One round's fault realisation (pure in the salted round key).
+
+        ``key`` is the fault-salted round key (``fold_in(round_key,
+        faults.SALT_FAULT)``) — callers own the salt, matching
+        :meth:`channel_draw`.  Rates are the traced scheme attributes, so
+        ``with_overrides`` vmaps them; the Byzantine set threshold draws
+        from the run-level ``fault_key`` (persistent, nested in the
+        fraction)."""
+        return faults.fault_draw(self.fault_key, key, m,
+                                 byzantine_frac=self.byzantine_frac,
+                                 fault_rate=self.fault_rate,
+                                 erasure_prob=self.erasure_prob,
+                                 fault_kind=self.cfg.fault_kind)
+
+    def cohort_fault_draw(self, key: jnp.ndarray, step,
+                          cohort: jnp.ndarray,
+                          m_total: int) -> faults.FaultDraw:
+        """The K-cohort's rows of the full-population fault realisation —
+        the fault analogue of :meth:`cohort_channel_draw`: a K < M cohort
+        sees exactly the faults the full simulation would have dealt those
+        devices, and K == M reproduces :meth:`fault_draw` bitwise."""
+        return faults.take_rows(self.fault_draw(key, step, m_total), cohort)
 
     # ---------------------------------------------------- encode/decode
     def encode(self, g: jnp.ndarray, state: jnp.ndarray, step, key,
@@ -436,6 +484,13 @@ class ADSGDScheme(Scheme):
         y_body = channel.ps_normalize(y, use_mr)
         return amp_decode(y_body, self._projector_for(ctx),
                           self.cfg.amp_iters)
+
+    def silent_state(self, g, state, new_state):
+        # a device that could not transmit (deep fade, mid-round dropout)
+        # banks its whole update — nothing of g_sp reached the MAC.  On
+        # the AWGN channel every device is active, so this branch is never
+        # *selected*; the fading subclasses inherit it.
+        return (g + state).astype(new_state.dtype)
 
     # ------------------------------------------------------ slice hooks
     # The fully-sharded pipeline (train/trainer.py phase 2): every device
@@ -690,6 +745,12 @@ class DDSGDScheme(_BitBudgetScheme):
         g_ec = g + state.astype(jnp.float32)
         v_q = compression.sbc_quantize(g_ec, q_t, self.q_max)
         return v_q, (g_ec - v_q).astype(state.dtype)
+
+    def silent_state(self, g, state, new_state):
+        # a D-DSGD device that failed mid-round banks its whole update
+        # (error feedback over the digital link); only the fault-injection
+        # path selects this — the legacy digital drivers never drop devices
+        return (g + state).astype(new_state.dtype)
 
 
 @register_scheme("signsgd")

@@ -22,8 +22,9 @@ not reshaping, is the only way to put M on a vmap axis).
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.flatten_util
@@ -35,6 +36,7 @@ from repro.core import channel
 from repro.core import schemes as schemes_mod
 from repro.core.schemes import MACContext, Scheme, get_scheme, round_simulated
 from repro.optim.optim import Optimizer
+from repro.robust import aggregators, faults, guards
 from repro.train.paper_repro import (
     accuracy, ce_loss, device_grads, init_linear,
 )
@@ -70,6 +72,7 @@ class Experiment:
     momentum_correction: float = 0.0
     seed: int = 0
     use_kernel: bool = False     # Pallas projection/AMP inside the scan
+    guard: Optional[guards.GuardConfig] = None   # round guardrails (§10)
 
 
 @dataclass
@@ -91,7 +94,7 @@ class EngineRun:
 
 def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
                  step, key: jnp.ndarray, mask: jnp.ndarray, ctx: MACContext,
-                 *, dev_keys=None, draw=None, mac=None):
+                 *, dev_keys=None, draw=None, mac=None, fault=None):
     """:func:`~repro.core.schemes.round_simulated` with a traced device mask.
 
     ``mask`` (M_pad,) marks which padded devices exist at this grid point:
@@ -105,10 +108,22 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
     The keyword hooks re-seat the round on a sampled cohort
     (:mod:`repro.population`): ``dev_keys`` (M_pad, ...) replaces the
     in-place key split, ``draw`` replaces the channel realisation (the
-    cohort view of a full-population draw), and ``mac`` — a callable
+    cohort view of a full-population draw), ``mac`` — a callable
     ``(frames, key, sigma2) -> y`` — replaces the flat analog MAC sum
-    (hierarchical edge-site aggregation).  Defaults preserve the legacy
-    path bitwise.
+    (hierarchical edge-site aggregation), and ``fault`` replaces the fault
+    realisation (the cohort view of a full-population trace).  Defaults
+    preserve the legacy path bitwise.
+
+    Fault injection (:mod:`repro.robust`, docs/DESIGN.md §10) is gated on
+    the *static* ``scheme.robust_on``: Byzantine/stale gradients transform
+    before encode, NaN/Inf poisoning hits the encoded *frame* (a broken
+    transmitter on the air interface — gradient-level NaN would be
+    filtered structurally by top-k sparsification), dropouts leave the
+    transmit set with error-feedback banking via ``Scheme.silent_state``,
+    and digital packet erasures drop the frame while the unaware device
+    banks nothing.  Robust aggregation gates on the static
+    ``cfg.aggregator`` / ``cfg.clip_power`` — independent of fault
+    injection, so defences can run without attacks and vice versa.
     """
     m_pad = grads.shape[0]
     mask_b = mask > 0
@@ -124,14 +139,41 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
         # rows by 1.0, so the unmasked equivalence below still holds bitwise
         draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m_pad,
                                    mask=mask_b)
+    robust = scheme.robust_on
+    cfg = scheme.cfg
+    true_grads = grads
+    if robust:
+        if fault is None:
+            fault = scheme.fault_draw(
+                jax.random.fold_in(key, faults.SALT_FAULT), step, m_pad)
+        grads = faults.apply_gradient_faults(
+            grads, fault, byz_attack=cfg.byz_attack,
+            byz_scale=scheme.byz_scale)
     active = draw.active
     frames, new_deltas, metrics = jax.vmap(
         lambda g, dl, kk, pf: scheme.encode(g, dl, step, kk,
                                             ctx.with_p_factor(pf)))(
             grads, deltas, dev_keys, draw.p_factor)
     if scheme.analog:
+        if robust:
+            # make_frame normalises every frame to P_t, so an analog
+            # attacker's leverage is transmit *power*, not gradient scale:
+            # Byzantine frames violate the power constraint by byz_scale
+            # in amplitude, and dropouts leave the transmit set mid-round
+            byz_amp = jnp.where(fault.byz, scheme.byz_scale, 1.0)
+            frames = frames * byz_amp[:, None].astype(frames.dtype)
+            active = active & ~fault.dropout
+        if cfg.clip_power:
+            # transmit-side hardware cap: the analog defence (bounds the
+            # power any device — honest or Byzantine — can put on the MAC)
+            frames = aggregators.clip_frame_power(
+                frames, scheme.power_cap * scheme.p_t(step))
+        if robust:
+            # after the clip: a power limiter cannot repair a broken DAC
+            frames = faults.apply_frame_faults(frames, fault)
         new_deltas = jnp.where(active[:, None], new_deltas,
-                               scheme.silent_state(grads, deltas, new_deltas))
+                               scheme.silent_state(true_grads, deltas,
+                                                   new_deltas))
         active = active & mask_b
         frames = schemes_mod.apply_channel_gain(
             frames, draw._replace(active=active))
@@ -140,15 +182,39 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
         y = (channel.mac_sum(frames, mac_key, sigma2) if mac is None
              else mac(frames, mac_key, sigma2))
     else:
+        if robust:
+            # dropouts know they failed -> bank their whole update; erased
+            # packets are lost in the channel and poisoned packets carry
+            # garbage payloads — either way the unaware device's state
+            # evolves as if sent
+            frames = faults.apply_frame_faults(frames, fault)
+            new_deltas = jnp.where(
+                fault.dropout[:, None],
+                scheme.silent_state(true_grads, deltas, new_deltas),
+                new_deltas)
+            active = active & ~fault.dropout & ~fault.erased
         active = active & mask_b
-        frames = frames * mask_b[:, None]
-        y = jnp.sum(frames, axis=0)
+        if cfg.aggregator != "mean":
+            y = aggregators.robust_combine(
+                frames, active, m_eff, aggregator=cfg.aggregator,
+                trim_frac=scheme.trim_frac, norm_cap=scheme.norm_cap)
+        else:
+            # the literal sum (never the trimmed path at trim=0: a sorted
+            # sum re-associates, which is not bitwise the same reduction)
+            frames = frames * (active if robust else mask_b)[:, None]
+            y = jnp.sum(frames, axis=0)
     # padded devices do not exist: their error state must not evolve
     new_deltas = jnp.where(mask_b[:, None], new_deltas, deltas)
     ghat = scheme.decode(y, step, ctx)
     w = mask.astype(jnp.float32)
     metrics = {k: jnp.sum(v * w) / m_eff for k, v in metrics.items()}
     metrics["active_frac"] = jnp.sum(active.astype(jnp.float32)) / m_eff
+    if robust:
+        faulty = fault.poison | fault.stale | fault.dropout | fault.erased
+        metrics["byz_frac"] = (jnp.sum((fault.byz & mask_b)
+                                       .astype(jnp.float32)) / m_eff)
+        metrics["fault_frac"] = (jnp.sum((faulty & mask_b)
+                                         .astype(jnp.float32)) / m_eff)
     return ghat, new_deltas, metrics
 
 
@@ -187,45 +253,77 @@ class CompiledExperiment:
 
     # ------------------------------------------------------------- pieces
     def _carry0(self):
-        return (self.params0, self.opt.init(self.params0),
-                jnp.zeros((self.m, self.d), jnp.float32),
-                jnp.zeros((self.m, self.d), jnp.float32))
+        carry = (self.params0, self.opt.init(self.params0),
+                 jnp.zeros((self.m, self.d), jnp.float32),
+                 jnp.zeros((self.m, self.d), jnp.float32))
+        if self.exp.guard is not None:
+            carry = carry + (guards.init_guard_state(),)
+        return carry
 
     def _round(self, sch: Scheme, carry, t, key, mask):
-        params, opt_state, deltas, momenta = carry
         exp = self.exp
+        if exp.guard is not None:
+            params, opt_state, deltas, momenta, gstate = carry
+        else:
+            params, opt_state, deltas, momenta = carry
+        old_extras = (deltas, momenta)
         grads, momenta = device_grads(
             params, self.unravel, self.xd, self.yd, momenta,
             local_steps=exp.local_steps, local_lr=exp.local_lr,
             momentum_correction=exp.momentum_correction)
-        if mask is None:
+        if mask is None and not sch.robust_on:
             ghat, deltas, met = round_simulated(sch, grads, deltas, t, key,
                                                 self.ctx)
         else:
+            # the fault-injection path lives in round_masked; an all-ones
+            # mask is pinned bitwise-equal to round_simulated
+            rmask = (mask if mask is not None
+                     else jnp.ones((self.m,), jnp.float32))
             ghat, deltas, met = round_masked(sch, grads, deltas, t, key,
-                                             mask, self.ctx)
-        params, opt_state = self.opt.apply(params, self.unravel(ghat),
-                                           opt_state)
-        out = {"acc": accuracy(params, self.xt, self.yt),
-               "loss": ce_loss(params, self.xt, self.yt),
-               "metrics": met}
-        return (params, opt_state, deltas, momenta), out
+                                             rmask, self.ctx)
+        if exp.guard is None:
+            params, opt_state = self.opt.apply(params, self.unravel(ghat),
+                                               opt_state)
+            out = {"acc": accuracy(params, self.xt, self.yt),
+                   "loss": ce_loss(params, self.xt, self.yt),
+                   "metrics": met}
+            return (params, opt_state, deltas, momenta), out
+        (params, opt_state, (deltas, momenta), gstate, loss,
+         gmet) = guards.guarded_step(
+            exp.guard, gstate, self.opt, params, opt_state, ghat,
+            self.unravel, extras=(deltas, momenta), old_extras=old_extras,
+            loss_fn=lambda p: ce_loss(p, self.xt, self.yt))
+        out = {"acc": accuracy(params, self.xt, self.yt), "loss": loss,
+               "metrics": {**met, **gmet}}
+        return (params, opt_state, deltas, momenta, gstate), out
 
     def _scan(self, overrides, keys, mask):
+        carry, outs = self.run_segment(overrides, keys, mask,
+                                       self._carry0(), 0)
+        outs["params"] = carry[0]
+        return outs
+
+    # ------------------------------------------------------- traced entry
+    def run_segment(self, overrides: Dict[str, jnp.ndarray],
+                    keys: jnp.ndarray, mask, carry, t0):
+        """Scan rounds ``t0 .. t0 + len(keys)`` from an explicit carry.
+
+        The checkpoint/resume building block: a full run is the composition
+        of its segments (the scan body is a pure function of ``(carry,
+        (t, key))``), so splitting a run at any boundary and resuming from
+        the saved carry reproduces the uninterrupted run bitwise.  Returns
+        ``(carry, outs)``.
+        """
         sch = (self.scheme.with_overrides(**overrides) if overrides
                else self.scheme)
-        steps = self.exp.steps
 
         def body(carry, inp):
             t, key = inp
             return self._round(sch, carry, t, key, mask)
 
-        carry, outs = jax.lax.scan(body, self._carry0(),
-                                   (jnp.arange(steps), keys))
-        outs["params"] = carry[0]
-        return outs
+        ts = t0 + jnp.arange(keys.shape[0])
+        return jax.lax.scan(body, carry, (ts, keys))
 
-    # ------------------------------------------------------- traced entry
     def run(self, overrides: Dict[str, jnp.ndarray], keys: jnp.ndarray):
         """One full run. Returns {"acc": (steps,), "loss": (steps,),
         "metrics": {...: (steps,)}, "params": pytree}."""
@@ -235,6 +333,69 @@ class CompiledExperiment:
                    keys: jnp.ndarray, mask: jnp.ndarray):
         """Padded-M variant: mask (M_pad,) marks live devices."""
         return self._scan(overrides, keys, mask)
+
+
+def _concat_outs(chunks: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Concatenate per-segment scan outputs along the round axis."""
+    return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
+
+
+def _restore_carry(ref_carry, loaded):
+    """Rebuild a checkpointed carry against the engine's reference pytree
+    (npz round-trips degrade NamedTuples — GuardState, BankedState — to
+    plain tuples; the reference structure restores the classes)."""
+    return jax.tree.unflatten(jax.tree.structure(ref_carry),
+                              jax.tree.leaves(loaded))
+
+
+def run_checkpointed(ce, overrides, keys, *, checkpoint_dir: str,
+                     checkpoint_every: int, mask=None, resume: bool = False,
+                     stop_after_step=None):
+    """Drive a compiled runner in checkpointed segments.
+
+    ``ce`` is a :class:`CompiledExperiment` (or any runner exposing
+    ``_carry0`` / ``run_segment``).  Every ``checkpoint_every`` rounds the
+    scan carry and the accumulated outputs are snapshotted via
+    ``train/checkpoint.py`` (atomic single-file replace); with
+    ``resume=True`` the run continues from the latest snapshot.  Because a
+    scan splits into segments as pure-function composition, the resumed
+    run is *bitwise-equal* to the uninterrupted one (pinned by
+    tests/test_robust.py).
+
+    ``stop_after_step`` simulates an interruption: the driver returns
+    ``None`` after the first segment boundary at or past it (the snapshot
+    is on disk; rerun with ``resume=True`` to finish).  Returns the outs
+    dict (with final ``params``) when the run completes.
+    """
+    steps = keys.shape[0]
+    every = max(int(checkpoint_every), 1)
+    path = os.path.join(checkpoint_dir, "engine_ckpt.npz")
+    from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+    carry = ce._carry0()
+    t0 = 0
+    chunks: List[Dict[str, Any]] = []
+    if resume and os.path.exists(path):
+        loaded, t0 = load_checkpoint(path)
+        carry = _restore_carry(carry, loaded["carry"])
+        if t0 > 0:
+            chunks = [jax.tree.map(np.asarray, loaded["outs"])]
+
+    seg_fn = jax.jit(lambda ov, k, c, t: ce.run_segment(ov, k, mask, c, t))
+    while t0 < steps:
+        n = min(every, steps - t0)
+        carry, outs = seg_fn(overrides, keys[t0:t0 + n], carry,
+                             jnp.int32(t0))
+        chunks.append(jax.tree.map(np.asarray, outs))
+        t0 += n
+        save_checkpoint(path, {"carry": carry,
+                               "outs": _concat_outs(chunks)}, step=t0)
+        if (stop_after_step is not None and t0 >= stop_after_step
+                and t0 < steps):
+            return None
+    outs = _concat_outs(chunks)
+    outs["params"] = jax.tree.map(np.asarray, carry[0])
+    return outs
 
 
 def _subsample(outs, exp: Experiment) -> EngineRun:
@@ -255,7 +416,11 @@ def run_compiled(x_dev: np.ndarray, y_dev: np.ndarray, x_test: np.ndarray,
                  lr: float = 1e-3, eval_every: int = 10, seed: int = 0,
                  optimizer: str = "adam", local_steps: int = 1,
                  local_lr: float = 0.1, momentum_correction: float = 0.0,
-                 use_kernel: bool = False) -> EngineRun:
+                 use_kernel: bool = False,
+                 guard: Optional[guards.GuardConfig] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, resume: bool = False,
+                 stop_after_step=None) -> Optional[EngineRun]:
     """Compiled replacement for ``run_federated``: same model, same
     schedule — one jitted scan instead of a Python loop.  At ``seed=0``
     the per-round key stream is ``run_federated``'s exactly
@@ -264,12 +429,28 @@ def run_compiled(x_dev: np.ndarray, y_dev: np.ndarray, x_test: np.ndarray,
     tests/test_experiments.py).  Nonzero ``seed`` shifts the stream to a
     disjoint key range for independent replicas — a knob the reference
     loop does not have (its ``seed`` argument never reaches the round
-    keys), so cross-implementation parity holds at seed 0 only."""
+    keys), so cross-implementation parity holds at seed 0 only.
+
+    ``guard`` enables the in-scan round guardrails
+    (:class:`repro.robust.guards.GuardConfig`); ``checkpoint_dir`` +
+    ``checkpoint_every`` switch to the segmented checkpoint/resume driver
+    (:func:`run_checkpointed`) — with ``resume=True`` an interrupted run
+    continues from its snapshot, bitwise-equal to the uninterrupted run.
+    Returns ``None`` when ``stop_after_step`` interrupts the run."""
     exp = Experiment(cfg=cfg, steps=steps, lr=lr, eval_every=eval_every,
                      optimizer=optimizer, local_steps=local_steps,
                      local_lr=local_lr, momentum_correction=momentum_correction,
-                     seed=seed, use_kernel=use_kernel)
+                     seed=seed, use_kernel=use_kernel, guard=guard)
     ce = CompiledExperiment(x_dev, y_dev, x_test, y_test, exp)
-    outs = jax.jit(ce.run)({}, round_keys(steps, seed))
-    outs = jax.tree.map(np.asarray, outs)
+    keys = round_keys(steps, seed)
+    if checkpoint_dir is not None and checkpoint_every > 0:
+        outs = run_checkpointed(ce, {}, keys, checkpoint_dir=checkpoint_dir,
+                                checkpoint_every=checkpoint_every,
+                                resume=resume,
+                                stop_after_step=stop_after_step)
+        if outs is None:
+            return None
+    else:
+        outs = jax.jit(ce.run)({}, keys)
+        outs = jax.tree.map(np.asarray, outs)
     return _subsample(outs, exp)

@@ -20,6 +20,9 @@ plus the channel-model scalars (``SCALAR_VMAP_AXES``): ``csi_err_var``,
 ``fading_threshold`` and ``fading_rho`` enter the round as one traced
 scalar each (a multiply or compare inside the scheme's channel draw), so a
 whole CSI-error / truncation / correlation grid rides one vmapped program.
+The fault/robustness rates (``ROBUST_VMAP_AXES``) vmap the same way —
+sweeping one auto-promotes the config to ``robust=True`` so the (static)
+fault path is compiled in for the whole grid.
 
 Everything else (``scheme``, ``s_frac``, ``k_frac``, ``projection``,
 ``amp_iters``, ``sigma2``, ...) is an ``OTAConfig`` field swept statically:
@@ -68,6 +71,18 @@ SCALAR_VMAP_AXES = ("csi_err_var", "fading_threshold", "fading_rho")
 POP_VMAP_AXES = ("avail_rate", "straggler_deadline", "k_active",
                  "site_noise_scale", "backhaul_sigma2")
 
+#: fault/robustness *rates* — traced scalars on the scheme (compares and
+#: multiplies inside the fault draw / aggregator / power clip), so a whole
+#: Byzantine-fraction or fault-rate grid rides one vmapped program.
+#: Sweeping any of them auto-promotes the base config to ``robust=True``
+#: (the static gate that compiles the fault path in; with all rates zero
+#: that path is bitwise-neutral — pinned by tests/test_robust.py).  The
+#: fault/aggregator *kinds* (``byz_attack``, ``fault_kind``,
+#: ``aggregator``, ``clip_power``) select program structure and stay
+#: static axes (docs/DESIGN.md §10).
+ROBUST_VMAP_AXES = ("byzantine_frac", "fault_rate", "erasure_prob",
+                    "byz_scale", "trim_frac", "norm_cap", "power_cap")
+
 
 @dataclass
 class SweepResult:
@@ -90,13 +105,12 @@ class SweepResult:
 
 def _validate_axes(axes: Dict[str, Sequence], base: OTAConfig) -> None:
     cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
+    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES
     for name, values in axes.items():
-        if (name not in VMAP_AXES and name not in SCALAR_VMAP_AXES
-                and name not in cfg_fields):
+        if name not in vmapped and name not in cfg_fields:
             raise KeyError(
                 f"unknown sweep axis {name!r}: vmapped axes are "
-                f"{VMAP_AXES + SCALAR_VMAP_AXES}, static axes are "
-                "OTAConfig fields")
+                f"{vmapped}, static axes are OTAConfig fields")
         if not len(list(values)):
             raise ValueError(f"sweep axis {name!r} is empty")
 
@@ -114,12 +128,16 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
     (xd, yd), (xt, yt) = dev_data, test_data
     axes = {k: list(v) for k, v in axes.items()}
     _validate_axes(axes, base)
+    if any(k in ROBUST_VMAP_AXES for k in axes):
+        # the swept rates are traced, but the fault path itself is a
+        # static gate — compile it in for the whole grid
+        base = dataclasses.replace(base, robust=True)
     m_pad = xd.shape[0]
     masked = "m_active" in axes
     if masked and max(axes["m_active"]) > m_pad:
         raise ValueError(f"m_active values must be <= M_pad = {m_pad}")
 
-    vmapped = VMAP_AXES + SCALAR_VMAP_AXES
+    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES
     static_names = [k for k in axes if k not in vmapped]
     vmap_names = [k for k in axes if k in vmapped]
     records: List[Dict[str, Any]] = []
@@ -138,7 +156,8 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
             *[axes[k] for k in vmap_names])] if vmap_names else [{}])
 
         # --- per-point schedule arrays (host precompute) -----------------
-        scalar_names = [k for k in vmap_names if k in SCALAR_VMAP_AXES]
+        scalar_names = [k for k in vmap_names
+                        if k in SCALAR_VMAP_AXES or k in ROBUST_VMAP_AXES]
         p_rows, q_rows, key_rows, mask_rows = [], [], [], []
         scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
         for point in grid:
@@ -223,10 +242,12 @@ def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
 
     (xt, yt) = test_data
     axes = {k: list(v) for k, v in axes.items()}
+    if any(k in ROBUST_VMAP_AXES for k in axes):
+        base = dataclasses.replace(base, robust=True)
     cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
     pop_fields = {f.name for f in dataclasses.fields(PopulationConfig)}
     vmapped = ("p_avg", "power_schedule", "seed") + SCALAR_VMAP_AXES \
-        + POP_VMAP_AXES
+        + POP_VMAP_AXES + ROBUST_VMAP_AXES
     for name, values in axes.items():
         if name == "m_active":
             raise KeyError(
@@ -266,7 +287,8 @@ def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
             *[axes[k] for k in vmap_names])] if vmap_names else [{}])
 
         scalar_names = [k for k in vmap_names
-                        if k in SCALAR_VMAP_AXES or k in POP_VMAP_AXES]
+                        if k in SCALAR_VMAP_AXES or k in POP_VMAP_AXES
+                        or k in ROBUST_VMAP_AXES]
         p_rows, q_rows, key_rows = [], [], []
         scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
         for point in grid:

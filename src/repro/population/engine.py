@@ -11,7 +11,9 @@ are O(K * d) plus O(M) scalars (keys/scores/masks), never O(M * d).
 RNG layout: round t of seed 0 uses ``PRNGKey(1000 + t)`` (the engine's key
 stream), salted per consumer — 0 MAC AWGN, 1 device encode, 2 channel draw
 (shared with the dense drivers), plus the population's own salts
-3 availability, 4 cohort sampling, 5 straggler latency.  Device m's encode
+3 availability, 4 cohort sampling, 5 straggler latency (6 is the fault
+trace, shared with the dense drivers — repro.robust.faults).  Device m's
+encode
 key is row m of ``split(fold_in(key, 1), M)`` and its channel row comes
 from the full-M draw (:meth:`Scheme.cohort_channel_draw`), so a K == M
 cohort with no churn/stragglers reproduces ``round_simulated`` /
@@ -41,9 +43,10 @@ from repro.configs.base import OTAConfig
 from repro.core.schemes import MACContext, Scheme, get_scheme
 from repro.data.partition import PopulationPartition
 from repro.experiments.engine import (
-    EngineRun, _subsample, round_keys, round_masked,
+    EngineRun, _subsample, round_keys, round_masked, run_checkpointed,
 )
 from repro.optim.optim import Optimizer
+from repro.robust import faults, guards
 from repro.population import churn, stragglers
 from repro.population.hierarchy import site_mac_sum
 from repro.population.sampler import sample_cohort
@@ -110,7 +113,8 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
                      mask: jnp.ndarray, grads: jnp.ndarray, step,
                      key: jnp.ndarray, ctx: MACContext, m_total: int, *,
                      gains=None, sites=None, n_sites: int = 1,
-                     site_noise_scale=1.0, backhaul_sigma2=0.0):
+                     site_noise_scale=1.0, backhaul_sigma2=0.0,
+                     site_trim_frac: float = 0.0):
     """One sampled-cohort aggregation round.
 
     cohort: (K,) sorted device ids; mask: (K,) 0/1 participation (churn,
@@ -133,6 +137,14 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
                                       cohort, m_total, mask=mask > 0)
     if gains is not None:
         draw = draw._replace(p_factor=draw.p_factor * gains)
+    fault = None
+    if scheme.robust_on:
+        # the cohort's rows of the full-population fault trace — a K < M
+        # cohort sees exactly the faults the full simulation would have
+        # dealt those devices (matching the channel-draw contract)
+        fault = scheme.cohort_fault_draw(
+            jax.random.fold_in(key, faults.SALT_FAULT), step, cohort,
+            m_total)
     mac = None
     if n_sites > 1:
         if sites is None:
@@ -141,12 +153,13 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
         def mac(frames, mac_key, sigma2):
             return site_mac_sum(frames, sites, n_sites, mac_key, sigma2,
                                 site_noise_scale=site_noise_scale,
-                                backhaul_sigma2=backhaul_sigma2)
+                                backhaul_sigma2=backhaul_sigma2,
+                                site_trim_frac=site_trim_frac)
 
     ghat, new_deltas, metrics = round_masked(scheme, grads, deltas, step,
                                              key, mask, ctx,
                                              dev_keys=dev_keys, draw=draw,
-                                             mac=mac)
+                                             mac=mac, fault=fault)
     banks = scatter_cohort(banks, cohort, new_deltas)
     metrics["cohort_frac"] = jnp.sum(mask) / cohort.shape[0]
     return ghat, banks, metrics
@@ -165,6 +178,7 @@ class PopulationExperiment:
     local_lr: float = 0.1
     seed: int = 0
     use_kernel: bool = False
+    guard: Optional[guards.GuardConfig] = None
 
 
 class CompiledPopulation:
@@ -218,11 +232,18 @@ class CompiledPopulation:
 
     # ------------------------------------------------------------- pieces
     def _carry0(self):
-        return (self.params0, self.opt.init(self.params0),
-                self.pstate0.banks)
+        carry = (self.params0, self.opt.init(self.params0),
+                 self.pstate0.banks)
+        if self.exp.guard is not None:
+            carry = carry + (guards.init_guard_state(),)
+        return carry
 
     def _round(self, sch: Scheme, carry, t, key):
-        params, opt_state, banks = carry
+        if self.exp.guard is not None:
+            params, opt_state, banks, gstate = carry
+        else:
+            params, opt_state, banks = carry
+        old_banks = banks
         exp, pop, ps = self.exp, self.exp.pop, self.pstate0
         avail = churn.availability(ps.arrival, ps.departure, t,
                                    jax.random.fold_in(key, SALT_AVAIL),
@@ -244,7 +265,17 @@ class CompiledPopulation:
             self.ctx, pop.m_total, gains=ps.gains[cohort],
             sites=ps.site[cohort], n_sites=pop.n_sites,
             site_noise_scale=self.site_noise_scale,
-            backhaul_sigma2=self.backhaul_sigma2)
+            backhaul_sigma2=self.backhaul_sigma2,
+            site_trim_frac=pop.site_trim_frac)
+        if exp.guard is not None:
+            params, opt_state, (banks,), gstate, loss, gmet = (
+                guards.guarded_step(
+                    exp.guard, gstate, self.opt, params, opt_state, ghat,
+                    self.unravel, extras=(banks,), old_extras=(old_banks,),
+                    loss_fn=lambda p: ce_loss(p, self.xt, self.yt)))
+            out = {"acc": accuracy(params, self.xt, self.yt),
+                   "loss": loss, "metrics": {**met, **gmet}}
+            return (params, opt_state, banks, gstate), out
         params, opt_state = self.opt.apply(params, self.unravel(ghat),
                                            opt_state)
         out = {"acc": accuracy(params, self.xt, self.yt),
@@ -253,9 +284,19 @@ class CompiledPopulation:
         return (params, opt_state, banks), out
 
     # ------------------------------------------------------- traced entry
-    def run(self, overrides: Dict[str, jnp.ndarray], keys: jnp.ndarray):
-        """One full run. Returns {"acc": (steps,), "loss": (steps,),
-        "metrics": {...: (steps,)}, "params": pytree}."""
+    def run_segment(self, overrides: Dict[str, jnp.ndarray],
+                    keys: jnp.ndarray, mask, carry, t0):
+        """Scan rounds ``t0 .. t0 + len(keys)`` from an explicit carry.
+
+        The checkpoint/resume building block (the population analogue of
+        :meth:`CompiledExperiment.run_segment` — same contract, so
+        :func:`repro.experiments.engine.run_checkpointed` drives both).
+        ``mask`` is accepted for signature compatibility and must be None:
+        populations draw their own participation masks per round.  Returns
+        ``(carry, outs)``.
+        """
+        if mask is not None:
+            raise ValueError("population runs draw their own masks")
         pop_ov = {k: v for k, v in overrides.items()
                   if k in POP_OVERRIDE_ATTRS}
         sch_ov = {k: v for k, v in overrides.items()
@@ -268,8 +309,14 @@ class CompiledPopulation:
             t, key = inp
             return runner._round(sch, carry, t, key)
 
-        carry, outs = jax.lax.scan(body, runner._carry0(),
-                                   (jnp.arange(self.exp.steps), keys))
+        ts = t0 + jnp.arange(keys.shape[0])
+        return jax.lax.scan(body, carry, (ts, keys))
+
+    def run(self, overrides: Dict[str, jnp.ndarray], keys: jnp.ndarray):
+        """One full run. Returns {"acc": (steps,), "loss": (steps,),
+        "metrics": {...: (steps,)}, "params": pytree}."""
+        carry, outs = self.run_segment(overrides, keys, None,
+                                       self._carry0(), jnp.int32(0))
         outs["params"] = carry[0]
         return outs
 
@@ -278,17 +325,33 @@ def run_population(data: PopulationData, x_test, y_test, cfg: OTAConfig,
                    pop: PopulationConfig, steps: int, lr: float = 1e-3,
                    eval_every: int = 10, seed: int = 0,
                    optimizer: str = "adam", local_steps: int = 1,
-                   local_lr: float = 0.1,
-                   use_kernel: bool = False) -> EngineRun:
+                   local_lr: float = 0.1, use_kernel: bool = False,
+                   guard: Optional[guards.GuardConfig] = None,
+                   checkpoint_dir: Optional[str] = None,
+                   checkpoint_every: int = 0, resume: bool = False,
+                   stop_after_step=None) -> Optional[EngineRun]:
     """``run_compiled`` for populations: one jitted scan over sampled
     cohorts.  At K == M_total with the churn/straggler defaults the run is
     bitwise ``run_compiled`` on the same device tensors (the RNG layout
-    and MAC order match; pinned by tests/test_population.py)."""
+    and MAC order match; pinned by tests/test_population.py).
+
+    ``guard`` and the ``checkpoint_*`` knobs mirror ``run_compiled``:
+    in-scan round guardrails, and the segmented checkpoint/resume driver
+    (returns ``None`` when ``stop_after_step`` interrupts the run)."""
     exp = PopulationExperiment(cfg=cfg, pop=pop, steps=steps, lr=lr,
                                eval_every=eval_every, optimizer=optimizer,
                                local_steps=local_steps, local_lr=local_lr,
-                               seed=seed, use_kernel=use_kernel)
+                               seed=seed, use_kernel=use_kernel, guard=guard)
     cp = CompiledPopulation(data, x_test, y_test, exp)
-    outs = jax.jit(cp.run)({}, round_keys(steps, seed))
+    keys = round_keys(steps, seed)
+    if checkpoint_dir is not None and checkpoint_every > 0:
+        outs = run_checkpointed(cp, {}, keys, checkpoint_dir=checkpoint_dir,
+                                checkpoint_every=checkpoint_every,
+                                resume=resume,
+                                stop_after_step=stop_after_step)
+        if outs is None:
+            return None
+    else:
+        outs = jax.jit(cp.run)({}, keys)
     outs = jax.tree.map(np.asarray, outs)
     return _subsample(outs, exp)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel
+from repro.robust import aggregators
 
 
 def site_assignment(m: int, n_sites: int) -> np.ndarray:
@@ -39,6 +40,7 @@ def site_mac_sum(
     sigma2,
     site_noise_scale=1.0,
     backhaul_sigma2=0.0,
+    site_trim_frac: float = 0.0,
 ) -> jnp.ndarray:
     """Two-stage MAC: per-site OTA partial sums, then the PS combine.
 
@@ -46,6 +48,13 @@ def site_mac_sum(
     cohort device.  Site j's receiver adds AWGN of variance
     ``sigma2 * site_noise_scale`` (keyed ``fold_in(key, j)``); the combine
     adds ``backhaul_sigma2`` (0.0 adds exact zeros — bitwise-safe).
+
+    ``site_trim_frac > 0`` (static) makes the backhaul combine *robust*:
+    the PS takes the coordinate-wise trimmed mean of the sites' partial
+    sums (scaled back to sum-equivalence) instead of the plain sum, so a
+    site whose whole OTA observation is poisoned — a Byzantine-heavy cell,
+    a jammed receiver — is discarded per coordinate.  The default 0.0
+    keeps the literal ``jnp.sum`` path bitwise.
     """
     s = frames.shape[-1]
     partial = jax.ops.segment_sum(frames, sites, num_segments=n_sites)
@@ -57,7 +66,13 @@ def site_mac_sum(
             jax.random.fold_in(key, j), (s,), sig_site, frames.dtype
         )
     )(jnp.arange(n_sites))
-    y = jnp.sum(partial + z, axis=0)
+    if site_trim_frac > 0.0:
+        y = aggregators.robust_combine(
+            partial + z, jnp.ones((n_sites,), bool), float(n_sites),
+            aggregator="trimmed_mean", trim_frac=site_trim_frac,
+        )
+    else:
+        y = jnp.sum(partial + z, axis=0)
     return y + channel.awgn(
         jax.random.fold_in(key, n_sites), y.shape, backhaul_sigma2, y.dtype
     )

@@ -60,6 +60,9 @@ class PopulationConfig:
     n_sites: int = 1
     site_noise_scale: float = 1.0  # per-site AWGN variance scale (traced)
     backhaul_sigma2: float = 0.0  # inter-site combine noise (traced)
+    # robust backhaul: trimmed-mean combine over site partials (static;
+    # 0.0 keeps the plain-sum path bitwise — repro.population.hierarchy)
+    site_trim_frac: float = 0.0
     seed: int = 0
 
     def __post_init__(self) -> None:

@@ -1,0 +1,39 @@
+"""Fault injection, robust aggregation, and round guardrails.
+
+The graceful-degradation layer: deterministic fault traces
+(:mod:`repro.robust.faults`), influence-bounded combines
+(:mod:`repro.robust.aggregators`), and in-scan safety rails
+(:mod:`repro.robust.guards`).  Wiring lives in the drivers
+(``round_masked`` / ``population_round``) and the compiled engines;
+see docs/DESIGN.md §10.
+"""
+from repro.robust.aggregators import (
+    clip_frame_power, median, norm_capped_sum, robust_combine, trimmed_mean,
+)
+from repro.robust.faults import (
+    SALT_FAULT, FaultDraw, apply_frame_faults, apply_gradient_faults,
+    byzantine_set, fault_base_key, fault_draw, take_rows,
+)
+from repro.robust.guards import (
+    GuardConfig, GuardState, guarded_step, init_guard_state,
+)
+
+__all__ = [
+    "SALT_FAULT",
+    "FaultDraw",
+    "GuardConfig",
+    "GuardState",
+    "apply_frame_faults",
+    "apply_gradient_faults",
+    "byzantine_set",
+    "clip_frame_power",
+    "fault_base_key",
+    "fault_draw",
+    "guarded_step",
+    "init_guard_state",
+    "median",
+    "norm_capped_sum",
+    "robust_combine",
+    "take_rows",
+    "trimmed_mean",
+]

@@ -1,0 +1,139 @@
+"""Robust aggregation: trimmed-mean / median / norm-cap combines.
+
+The digital drivers aggregate device frames with a plain ``sum`` over the
+leading axis — one Byzantine device moves the aggregate arbitrarily.  The
+combines here bound that influence, coordinate-wise (trim / median) or
+per-frame (norm cap), while fitting the drivers' contract: each returns a
+*sum-equivalent* ``(s,)`` vector (the robust mean times the effective
+device count), so the scheme's ``decode`` — which divides by the traced
+``ctx.m`` — needs no change.
+
+Everything here is traced-friendly: the trim fraction, the norm cap, and
+the effective device count are data (vmappable sweep axes); only the
+aggregator *name* is static.  Dead rows (masked-out, erased, dropped
+devices) are routed to ``+inf`` before the sort, and the traced rank
+window — computed from the *live* row count — excludes them.  Note the
+exactness boundary: a sorted-and-trimmed sum *re-associates* the
+reduction, so ``trimmed_mean`` at ``trim_frac=0`` equals the arithmetic
+mean mathematically but not bitwise — which is why the drivers keep the
+literal ``jnp.sum`` on the static ``aggregator="mean"`` path instead of
+routing it through here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _n_alive(alive: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.sum(alive.astype(jnp.float32)), 1.0)
+
+
+def _rank_window_mean(frames: jnp.ndarray, alive: jnp.ndarray, lo, hi):
+    """Mean over sort-ranks ``[lo, hi]`` per coordinate, dead rows excluded.
+
+    frames: (m, s); alive: (m,) bool; lo/hi: traced inclusive rank bounds
+    within the live rows (live rows sort before the +inf dead rows, and
+    non-finite live values — a poisoned device's frame — sort last among
+    the live, where an adequate trim removes them).
+    """
+    big = jnp.asarray(jnp.inf, frames.dtype)
+    x = jnp.where(alive[:, None], frames, big)
+    xs = jnp.sort(x, axis=0)
+    i = jnp.arange(frames.shape[0], dtype=jnp.float32)[:, None]
+    keep = (i >= lo) & (i <= hi)
+    count = jnp.maximum(hi - lo + 1.0, 1.0)
+    return jnp.sum(jnp.where(keep, xs, 0.0), axis=0) / count
+
+
+def trimmed_mean(frames: jnp.ndarray, alive: jnp.ndarray,
+                 trim_frac) -> jnp.ndarray:
+    """(s,) coordinate-wise trimmed mean over the live rows.
+
+    Discards the ``floor(trim_frac * n_alive)`` smallest and largest
+    values per coordinate; ``trim_frac`` is traced and the live count is
+    computed from ``alive``.  Robust to up to that many outliers per side.
+    """
+    n = _n_alive(alive)
+    lo = jnp.floor(jnp.asarray(trim_frac, jnp.float32) * n)
+    # degenerate cohorts: never trim away every row
+    lo = jnp.minimum(lo, jnp.maximum(jnp.ceil(n / 2.0) - 1.0, 0.0))
+    return _rank_window_mean(frames, alive, lo, n - 1.0 - lo)
+
+
+def median(frames: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """(s,) coordinate-wise median over the live rows (maximal trimming:
+    the mean of the one or two middle ranks)."""
+    n = _n_alive(alive)
+    lo = jnp.floor((n - 1.0) / 2.0)
+    return _rank_window_mean(frames, alive, lo, n - 1.0 - lo)
+
+
+def norm_capped_sum(frames: jnp.ndarray, alive: jnp.ndarray,
+                    cap) -> jnp.ndarray:
+    """(s,) sum of the live frames, each L2-clipped to ``cap`` *times the
+    median live-row norm*.
+
+    The reference scale is the coordinate-wise :func:`median` of the live
+    rows' L2 norms — itself Byzantine-robust below 50% attackers — so the
+    cap self-tunes to the honest gradient scale instead of needing an
+    absolute magnitude guess; ``cap = 1.0`` clips every row to the median
+    norm.  Honest frames at or below the cap pass through with scale
+    exactly 1.0.  Non-finite rows (a poisoned frame has no meaningful
+    norm) contribute exactly zero — the norm cap doubles as the NaN/Inf
+    filter, which matters for the *sparse* digital schemes where
+    coordinate-wise trimming is destructive (a top-k frame's signal lives
+    at the extreme ranks, precisely what a trim discards; the per-frame
+    cap leaves sparse supports intact).
+    """
+    cap = jnp.asarray(cap, frames.dtype)
+    nrm = jnp.sqrt(jnp.sum(frames * frames, axis=-1, keepdims=True))
+    med = median(nrm, alive)
+    # a majority-poisoned round has a non-finite median norm: degrade to
+    # an all-zero (skipped) aggregate rather than poisoning honest rows
+    cap_abs = cap * jnp.where(jnp.isfinite(med), med, 0.0)
+    finite = jnp.isfinite(nrm)
+    scale = jnp.where(nrm <= cap_abs, 1.0,
+                      cap_abs / jnp.maximum(nrm, 1e-30))
+    scale = jnp.where(finite, scale, 0.0)
+    f_safe = jnp.where(finite, frames, 0.0)
+    return jnp.sum(f_safe * scale * alive[:, None].astype(frames.dtype),
+                   axis=0)
+
+
+def robust_combine(frames: jnp.ndarray, alive: jnp.ndarray, m_eff, *,
+                   aggregator: str, trim_frac=0.1,
+                   norm_cap=1.0) -> jnp.ndarray:
+    """Sum-equivalent robust combine (the drivers' digital-MAC hook).
+
+    Returns ``m_eff *`` the robust mean, so a decode dividing by the
+    traced ``ctx.m == m_eff`` recovers the robust mean exactly where the
+    plain path recovers the arithmetic mean.  ``aggregator`` is static;
+    everything else is traced.
+    """
+    if aggregator == "trimmed_mean":
+        return trimmed_mean(frames, alive, trim_frac) * m_eff
+    if aggregator == "median":
+        return median(frames, alive) * m_eff
+    if aggregator == "norm_cap":
+        return norm_capped_sum(frames, alive, norm_cap)
+    raise ValueError(f"unknown aggregator {aggregator!r}; "
+                     "known: mean | trimmed_mean | median | norm_cap")
+
+
+def clip_frame_power(frames: jnp.ndarray, p_max) -> jnp.ndarray:
+    """Transmit-side hardware power cap for analog OTA frames.
+
+    Rows whose energy exceeds ``p_max`` are rescaled onto the cap; rows at
+    or below it pass through untouched (scale exactly 1.0).  An honest
+    A-DSGD frame is normalised to ``P_t`` by ``channel.make_frame``, so a
+    cap of ``power_cap * P_t`` with ``power_cap > 1`` leaves honest
+    devices alone while flattening a Byzantine device's power boost —
+    the analog analogue of the digital norm cap (an analog attacker
+    cannot move the OTA sum without spending receive power, and the cap
+    bounds the power it can spend).
+    """
+    p_max = jnp.asarray(p_max, frames.dtype)
+    energy = jnp.sum(frames * frames, axis=-1, keepdims=True)
+    scale = jnp.where(energy > p_max,
+                      jnp.sqrt(p_max / jnp.maximum(energy, 1e-30)), 1.0)
+    return frames * scale

@@ -1,0 +1,150 @@
+"""Deterministic fault traces: who misbehaves, when, and how.
+
+A fault trace is a pure function of ``(fault_key, round_key, device_id)``,
+so it evaluates identically inside a compiled ``lax.scan``, in a looped
+reference run, and under ``vmap`` — the same contract the fading processes
+follow (:mod:`repro.core.fading`).  Two key streams with different
+lifetimes:
+
+* **Persistent Byzantine membership** comes from the run-level
+  ``fault_key`` (:func:`fault_base_key`, derived from ``OTAConfig.seed``):
+  a device is Byzantine for the whole run, and because membership is
+  thresholding one fixed uniform draw per device, the Byzantine sets are
+  *nested and monotone* in ``byzantine_frac`` — a swept fraction axis
+  grows the attacker set instead of reshuffling it (common random numbers
+  for paired comparisons).
+* **Transient faults** (NaN/Inf frame poisoning, stale-update replay,
+  mid-round dropout, digital packet erasure) redraw each round from the
+  fault-salted round key (``fold_in(round_key, SALT_FAULT)``, salt 6 in
+  the engine's key layout — 0 MAC AWGN, 1 encode, 2 channel draw, 3
+  availability, 4 cohort sampling, 5 straggler latency).
+
+The draw shape is ``(m,)`` booleans per fault class (:class:`FaultDraw`);
+rates are *traced* scalars so the sweep engine vmaps whole fault grids on
+one program (``ROBUST_VMAP_AXES``), while the fault *kind* and the attack
+*shape* are static strings that select program structure.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+#: round-key salt owned by the fault layer (see the engine's salt table)
+SALT_FAULT = 6
+
+#: decorrelates the run-level Byzantine stream from the fading stream
+FAULT_SEED_SALT = 0x0FA1175
+
+
+def fault_base_key(seed: int) -> jnp.ndarray:
+    """Run-level key anchoring the persistent Byzantine membership.
+
+    Derived from ``OTAConfig.seed`` like ``fading.fading_base_key``: the
+    attacker *set* is a property of the run configuration, not of the
+    per-round key stream, so a ``seed`` sweep axis (which shifts the round
+    keys) holds the Byzantine set fixed across replicas.
+    """
+    return jax.random.PRNGKey(seed ^ FAULT_SEED_SALT)
+
+
+class FaultDraw(NamedTuple):
+    """One round's fault realisation over ``m`` devices (all ``(m,)`` bool).
+
+    ``byz`` is the persistent Byzantine set; exactly one of
+    ``poison`` / ``stale`` / ``dropout`` carries the transient draw (the
+    static ``fault_kind`` selects which — the others are all-False
+    constants that gate to nothing); ``erased`` is the independent digital
+    packet-erasure draw.  ``poison_value`` is the static NaN/Inf payload.
+    """
+    byz: jnp.ndarray
+    poison: jnp.ndarray
+    stale: jnp.ndarray
+    dropout: jnp.ndarray
+    erased: jnp.ndarray
+    poison_value: float = float("nan")
+
+
+def byzantine_set(fault_key: jnp.ndarray, m: int, byzantine_frac) -> jnp.ndarray:
+    """(m,) bool persistent Byzantine membership, nested in the fraction."""
+    u = jax.random.uniform(fault_key, (m,))
+    return u < jnp.asarray(byzantine_frac, jnp.float32)
+
+
+def fault_draw(fault_key: jnp.ndarray, key: jnp.ndarray, m: int, *,
+               byzantine_frac, fault_rate, erasure_prob,
+               fault_kind: str = "nan") -> FaultDraw:
+    """Evaluate the fault trace for one round.
+
+    ``key`` is the fault-salted round key (``fold_in(round_key,
+    SALT_FAULT)``); callers own the salt, matching the channel-draw
+    convention.  Rates are traced; ``fault_kind`` is static.
+    """
+    if fault_kind not in ("nan", "inf", "stale", "dropout"):
+        raise ValueError(f"unknown fault_kind {fault_kind!r}; "
+                         "known: nan | inf | stale | dropout")
+    byz = byzantine_set(fault_key, m, byzantine_frac)
+    hit = (jax.random.uniform(key, (m,))
+           < jnp.asarray(fault_rate, jnp.float32))
+    erased = (jax.random.uniform(jax.random.fold_in(key, 1), (m,))
+              < jnp.asarray(erasure_prob, jnp.float32))
+    none = jnp.zeros((m,), bool)
+    return FaultDraw(
+        byz=byz,
+        poison=hit if fault_kind in ("nan", "inf") else none,
+        stale=hit if fault_kind == "stale" else none,
+        dropout=hit if fault_kind == "dropout" else none,
+        erased=erased,
+        poison_value=float("inf") if fault_kind == "inf" else float("nan"),
+    )
+
+
+def apply_gradient_faults(grads: jnp.ndarray, fault: FaultDraw, *,
+                          byz_attack: str = "sign_flip",
+                          byz_scale=10.0) -> jnp.ndarray:
+    """Device-side (pre-encode) gradient transforms.
+
+    * Byzantine ``sign_flip``: g -> -byz_scale * g (coordinated directional
+      attack); ``scale``: g -> byz_scale * g (magnitude attack).
+    * Stale devices contribute g = 0 this round: the encode then replays
+      whatever residual their error accumulator banked — a stale-update
+      replay with error-feedback semantics intact.
+
+    Poisoning is *not* a gradient transform — sparsifying encodes filter
+    non-finite coordinates structurally (a NaN fails every top-k magnitude
+    compare and drops out of the frame), so a gradient-level NaN never
+    reaches the MAC.  The physical fault is a transmitter emitting garbage
+    on the air interface: :func:`apply_frame_faults` poisons the encoded
+    frame instead.  Dropout and erasure act on the transmit set, not the
+    gradient — the drivers fold them into the active mask.
+    """
+    if byz_attack not in ("sign_flip", "scale"):
+        raise ValueError(f"unknown byz_attack {byz_attack!r}; "
+                         "known: sign_flip | scale")
+    g = grads
+    sgn = -1.0 if byz_attack == "sign_flip" else 1.0
+    scale = sgn * jnp.asarray(byz_scale, g.dtype)
+    g = jnp.where(fault.byz[:, None], scale * g, g)
+    g = jnp.where(fault.stale[:, None], 0.0, g)
+    return g
+
+
+def apply_frame_faults(frames: jnp.ndarray, fault: FaultDraw) -> jnp.ndarray:
+    """Air-interface poisoning: faulty transmitters emit NaN/Inf frames.
+
+    Applied *after* encode (and after any transmit-side power clip — a
+    hardware limiter cannot repair a broken DAC), so the garbage reaches
+    the MAC sum exactly as a malfunctioning radio's would.  The unaware
+    device's error-feedback state evolves as if its real frame had been
+    sent — the same semantics as a packet erasure.
+    """
+    return jnp.where(fault.poison[:, None],
+                     jnp.asarray(fault.poison_value, frames.dtype), frames)
+
+
+def take_rows(fault: FaultDraw, cohort: jnp.ndarray) -> FaultDraw:
+    """The cohort's rows of a full-population fault draw (the population
+    engine's gather, mirroring ``Scheme.cohort_channel_draw``)."""
+    return FaultDraw(*(jnp.take(v, cohort, axis=0)
+                       for v in fault[:5]), fault.poison_value)

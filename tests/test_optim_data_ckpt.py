@@ -92,3 +92,44 @@ def test_checkpoint_roundtrip(tmp_path):
     loaded, step = load_checkpoint(path)
     assert step == 42
     jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), state, loaded)
+
+
+def test_checkpoint_roundtrips_bfloat16_and_complex(tmp_path):
+    """Extended dtypes survive: bfloat16 rides a uint bit-pattern view
+    (npz would degrade it to an opaque void record), complex is native."""
+    state = {"bf": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16),
+             "half": jnp.asarray([[0.5, 1.0]], jnp.float16),
+             "cx": jnp.asarray([1 + 2j, -3.5j], jnp.complex64),
+             "nested": {"bf": jnp.ones((2, 2), jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "dtypes.npz")
+    save_checkpoint(path, state, step=3)
+    loaded, step = load_checkpoint(path)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrips_empty_containers(tmp_path):
+    """{} and () produce no leaves; sentinel entries keep the structure."""
+    state = {"params": {"w": jnp.ones(2)}, "extras": (), "aux": {},
+             "mixed": ({"inner": ()}, jnp.zeros(1))}
+    path = os.path.join(tmp_path, "empty.npz")
+    save_checkpoint(path, state, step=0)
+    loaded, _ = load_checkpoint(path)
+    assert jax.tree.structure(state) == jax.tree.structure(loaded)
+    assert loaded["extras"] == () and loaded["aux"] == {}
+    assert loaded["mixed"][0] == {"inner": ()}
+
+
+def test_checkpoint_step_default_without_meta(tmp_path):
+    """Files written without the meta block still load, with step == 0."""
+    path = os.path.join(tmp_path, "legacy.npz")
+    np.savez(path, **{"state/w": np.arange(3.0)})
+    loaded, step = load_checkpoint(path)
+    assert step == 0
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.arange(3.0))
+    # and the modern writer always returns the exact int it saved
+    save_checkpoint(path, {"w": jnp.ones(1)}, step=2**31)
+    _, step = load_checkpoint(path)
+    assert step == 2**31

@@ -338,3 +338,97 @@ def test_population_scale_1e5_runs_with_banked_memory():
     eng = run_population(pdata, xte, yte, cfg, pop, steps=3, eval_every=1)
     assert len(eng.accs) == 3
     assert all(np.isfinite(eng.losses))
+
+
+# ---------------------------------------------------------------------------
+# robustness: banked EF state under dropped devices, faults, site trimming
+# ---------------------------------------------------------------------------
+
+
+def test_masked_out_cohort_devices_keep_banked_state():
+    """Stragglers / churn-dropped cohort rows (mask 0) must neither lose
+    nor evolve their banked error accumulators — the EF contract for a
+    device that never transmitted this round."""
+    g = np.load(GOLDEN)
+    grads = jnp.asarray(g["grads"])
+    m, d = grads.shape
+    cfg = PARITY_CASES["a_dsgd_dense"]
+    scheme = get_scheme(cfg, d, m)
+    ctx = MACContext(m=m, fading=cfg.fading, csi=scheme.csi)
+    cohort = jnp.arange(m, dtype=jnp.int32)
+    warm = jax.random.normal(jax.random.PRNGKey(8), (m, d))
+    banks = scatter_cohort(init_banks(m, m, d), cohort, warm)
+    mask = jnp.ones((m,), jnp.float32).at[jnp.asarray([1, 3])].set(0.0)
+    _, banks, _ = population_round(scheme, banks, cohort, mask, grads, 0,
+                                   jax.random.PRNGKey(11), ctx, m)
+    after = np.asarray(gather_cohort(banks, cohort))
+    np.testing.assert_array_equal(after[[1, 3]], np.asarray(warm)[[1, 3]])
+    assert not np.array_equal(after[0], np.asarray(warm)[0])
+
+
+def test_population_fault_trace_matches_dense_engine(data):
+    """K == M with faults on: the cohort view of the population fault
+    trace reproduces the dense robust engine bitwise (same trace, same
+    Byzantine set, same banking)."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(robust=True, byzantine_frac=0.3, byz_scale=4.0,
+                 fault_rate=0.25, fault_kind="stale")
+    pop = PopulationConfig(m_total=M, k_cohort=M, bank_size=3)
+    ref = run_compiled(xd, yd, xte, yte, cfg, steps=STEPS, lr=1e-3,
+                       eval_every=2)
+    eng = run_population(PopulationData.from_dense(xd, yd), xte, yte, cfg,
+                         pop, steps=STEPS, lr=1e-3, eval_every=2)
+    assert eng.accs == ref.accs
+    assert eng.losses == ref.losses
+    assert [m["byz_frac"] for m in eng.metrics] == \
+        [m["byz_frac"] for m in ref.metrics]
+
+
+def test_population_checkpoint_resume_bitwise(data, tmp_path):
+    """Interrupt a faulted population run mid-scan, resume from the npz:
+    the stitched run equals the uninterrupted one entry for entry."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(robust=True, byzantine_frac=0.25, byz_scale=3.0)
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M, bank_size=3,
+                          avail_rate=0.9)
+    kw = dict(steps=STEPS, lr=1e-3, eval_every=1)
+    plain = run_population(pdata, xte, yte, cfg, pop, **kw)
+    ckpt = os.path.join(tmp_path, "pop")
+    half = run_population(pdata, xte, yte, cfg, pop, **kw,
+                          checkpoint_dir=ckpt, checkpoint_every=2,
+                          stop_after_step=3)
+    assert half is None  # interrupted: partial state on disk, no result
+    resumed = run_population(pdata, xte, yte, cfg, pop, **kw,
+                             checkpoint_dir=ckpt, checkpoint_every=2,
+                             resume=True)
+    assert resumed.accs == plain.accs
+    assert resumed.losses == plain.losses
+    for a, b in zip(resumed.metrics, plain.metrics):
+        assert a == b
+
+
+def test_site_trim_discards_poisoned_site():
+    """Backhaul trimming: one site's OTA partial sum is hijacked to a huge
+    value; the trimmed combine stays near the honest sum, the plain
+    combine is dragged away."""
+    key = jax.random.PRNGKey(7)
+    frames = jax.random.normal(key, (12, 40))
+    sites = jnp.asarray(np.arange(12) % 4, jnp.int32)
+    honest = np.asarray(jnp.sum(frames, axis=0))
+    bad = jnp.where((sites == 2)[:, None], 1e6, frames)
+    plain = np.asarray(site_mac_sum(bad, sites, 4, key, 0.0))
+    trimmed = np.asarray(site_mac_sum(bad, sites, 4, key, 0.0,
+                                      site_trim_frac=0.25))
+    assert np.abs(plain - honest).max() > 1e5
+    assert np.abs(trimmed - honest).max() < np.abs(plain - honest).max() / 100
+
+
+def test_site_trim_hierarchical_run_executes(data):
+    (xd, yd), (xte, yte) = data
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M, n_sites=2,
+                          site_trim_frac=0.3)
+    eng = run_population(pdata, xte, yte, _adsgd(), pop, steps=STEPS,
+                         eval_every=2)
+    assert all(np.isfinite(eng.losses))

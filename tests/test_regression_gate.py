@@ -1,0 +1,59 @@
+"""The CI benchmark regression gate, including the --strict vacuity check."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.check_regression import compare, main  # noqa: E402
+
+KERNELS = {"entries": [
+    {"size": 1024, "op": "topk", "path": "pallas", "us_per_call": 10.0},
+    {"size": 4096, "op": "topk", "path": "pallas", "us_per_call": 40.0},
+]}
+SWEEPS = {"a_dsgd_us_per_round": 100.0, "d_dsgd_us_per_round": 80.0,
+          "compiled_cold_us_per_round": 5e6, "label": "not-a-timing"}
+
+
+def _entries(us_by_size):
+    return {"entries": [dict(e, us_per_call=us_by_size[e["size"]])
+                        for e in KERNELS["entries"]]}
+
+
+def test_within_threshold_passes_and_regression_fails():
+    assert compare(KERNELS, _entries({1024: 15.0, 4096: 60.0})) == 0
+    assert compare(KERNELS, _entries({1024: 25.0, 4096: 60.0})) == 1
+
+
+def test_missing_entry_warns_but_passes_unless_strict():
+    fresh = {"entries": KERNELS["entries"][:1]}
+    assert compare(KERNELS, fresh) == 0
+    # partial match: strict is satisfied — at least one timing was compared
+    assert compare(KERNELS, fresh, strict=True) == 0
+
+
+def test_strict_fails_when_nothing_matches():
+    """A wholesale schema/naming drift leaves the gate comparing nothing;
+    --strict turns that silent vacuity into a failure."""
+    renamed = {"entries": [dict(e, op="topk_v2") for e in KERNELS["entries"]]}
+    assert compare(KERNELS, renamed) == 0  # non-strict: silently vacuous
+    assert compare(KERNELS, renamed, strict=True) == 1
+    # sweeps flavour: same rule, and ungated/non-timing keys don't count
+    assert compare(SWEEPS, {"compiled_cold_us_per_round": 1.0,
+                            "label": "x"}, strict=True) == 1
+    # an empty baseline has nothing to gate: strict stays quiet
+    assert compare({"entries": []}, renamed, strict=True) == 0
+
+
+def test_main_parses_strict_flag(tmp_path):
+    base = os.path.join(tmp_path, "base.json")
+    fresh = os.path.join(tmp_path, "fresh.json")
+    with open(base, "w") as fh:
+        json.dump(KERNELS, fh)
+    with open(fresh, "w") as fh:
+        json.dump({"entries": [dict(e, op="renamed")
+                               for e in KERNELS["entries"]]}, fh)
+    assert main(["check_regression.py", base, fresh]) == 0
+    assert main(["check_regression.py", "--strict", base, fresh]) == 1
+    with open(fresh, "w") as fh:
+        json.dump(KERNELS, fh)
+    assert main(["check_regression.py", "--strict", base, fresh]) == 0

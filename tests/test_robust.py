@@ -1,0 +1,423 @@
+"""Fault injection, robust aggregation, guardrails, checkpoint/resume.
+
+Three acceptance bars (docs/DESIGN.md §10):
+
+* **bitwise neutrality** — with every fault rate at zero and every defence
+  off, the robust code path reproduces the default path bit for bit (the
+  existing goldens must not move);
+* **semantic fidelity** — each fault class is equivalent to its physical
+  description (stale == zero gradient, dropout == leaving the transmit
+  set with banking, poison == garbage on the air interface), and each
+  defence measurably counters its attack;
+* **bitwise resume** — an interrupted-and-resumed checkpointed run equals
+  the uninterrupted run exactly (scan segmentation is pure-function
+  composition).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OTAConfig
+from repro.core.schemes import MACContext, get_scheme
+from repro.data.synthetic import federated_split, make_classification
+from repro.experiments import run_compiled, run_sweep
+from repro.experiments.engine import round_keys, round_masked
+from repro.experiments.sweep import ROBUST_VMAP_AXES
+from repro.robust import aggregators, faults, guards
+
+STEPS, M, B = 6, 8, 64
+
+
+@pytest.fixture(scope="module")
+def data():
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=800, n_test=300, dim=48, noise=2.0, seed=3)
+    xd, yd = federated_split(xtr, ytr, m=M, b=B, iid=True, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+def _adsgd(**kw):
+    base = dict(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                total_steps=STEPS, projection="dense", amp_iters=6,
+                mean_removal_steps=2)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+def _ddsgd(**kw):
+    base = dict(scheme="d_dsgd", k_frac=0.25, p_avg=500.0,
+                total_steps=STEPS)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# fault traces: determinism, nesting, cohort views
+# ---------------------------------------------------------------------------
+
+
+def test_byzantine_sets_nested_in_fraction():
+    """A larger swept fraction grows the attacker set, never reshuffles it."""
+    fk = faults.fault_base_key(0)
+    prev = np.zeros(64, bool)
+    for frac in (0.05, 0.1, 0.3, 0.6, 1.0):
+        cur = np.asarray(faults.byzantine_set(fk, 64, frac))
+        assert (prev <= cur).all(), f"set not nested at frac={frac}"
+        prev = cur
+    assert prev.all()  # frac=1.0 marks everyone
+
+
+def test_cohort_fault_draw_is_rows_of_full_draw():
+    """A K < M cohort sees exactly the full population's fault trace rows."""
+    cfg = _adsgd(byzantine_frac=0.4, fault_rate=0.3, erasure_prob=0.2)
+    sch = get_scheme(cfg, 97, 4)
+    key = jax.random.fold_in(jax.random.PRNGKey(1003), faults.SALT_FAULT)
+    full = sch.fault_draw(key, 3, 10)
+    cohort = jnp.asarray([1, 4, 7, 9])
+    sub = sch.cohort_fault_draw(key, 3, cohort, 10)
+    for name in ("byz", "poison", "stale", "dropout", "erased"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(full, name))[np.asarray(cohort)],
+            np.asarray(getattr(sub, name)), err_msg=name)
+
+
+def test_fault_draw_validates_kind_and_attack():
+    cfg = _adsgd()
+    with pytest.raises(ValueError, match="fault_kind"):
+        faults.fault_draw(faults.fault_base_key(0), jax.random.PRNGKey(0),
+                          4, byzantine_frac=0.0, fault_rate=0.0,
+                          erasure_prob=0.0, fault_kind="gamma_ray")
+    draw = faults.fault_draw(faults.fault_base_key(0), jax.random.PRNGKey(0),
+                             4, byzantine_frac=1.0, fault_rate=0.0,
+                             erasure_prob=0.0)
+    with pytest.raises(ValueError, match="byz_attack"):
+        faults.apply_gradient_faults(jnp.ones((4, 3)), draw,
+                                     byz_attack="telepathy")
+    del cfg
+
+
+# ---------------------------------------------------------------------------
+# robust aggregators: bounds, invariances, degradation
+# ---------------------------------------------------------------------------
+
+
+def _rand_frames(seed, m=9, s=7):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(m, s)),
+                       jnp.float32)
+
+
+def test_trimmed_mean_bounded_by_live_minmax():
+    frames = _rand_frames(0)
+    alive = jnp.asarray([1, 1, 1, 0, 1, 1, 0, 1, 1], bool)
+    out = np.asarray(aggregators.trimmed_mean(frames, alive, 0.2))
+    live = np.asarray(frames)[np.asarray(alive)]
+    assert (out >= live.min(axis=0) - 1e-6).all()
+    assert (out <= live.max(axis=0) + 1e-6).all()
+
+
+def test_trimmed_mean_permutation_invariant():
+    frames = _rand_frames(1)
+    alive = jnp.ones(frames.shape[0], bool)
+    perm = jnp.asarray(np.random.default_rng(2).permutation(frames.shape[0]))
+    a = np.asarray(aggregators.trimmed_mean(frames, alive, 0.25))
+    b = np.asarray(aggregators.trimmed_mean(frames[perm], alive[perm], 0.25))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_trimmed_mean_trim_zero_equals_mean():
+    frames = _rand_frames(3)
+    alive = jnp.ones(frames.shape[0], bool)
+    out = np.asarray(aggregators.trimmed_mean(frames, alive, 0.0))
+    np.testing.assert_allclose(out, np.asarray(frames).mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_ignores_dead_row_outliers():
+    """Dead rows sort to +inf and must never enter the trim window."""
+    frames = _rand_frames(4, m=6)
+    poisoned = frames.at[2].set(1e30).at[5].set(-1e30)
+    alive = jnp.asarray([1, 1, 0, 1, 1, 0], bool)
+    a = np.asarray(aggregators.trimmed_mean(frames, alive, 0.2))
+    b = np.asarray(aggregators.trimmed_mean(poisoned, alive, 0.2))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_median_matches_numpy_on_live_rows():
+    frames = _rand_frames(5, m=7)
+    alive = jnp.asarray([1, 1, 1, 0, 1, 1, 0], bool)
+    out = np.asarray(aggregators.median(frames, alive))
+    ref = np.median(np.asarray(frames)[np.asarray(alive)], axis=0)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+
+
+def test_norm_cap_passthrough_is_bitwise_for_equal_norms():
+    """Equal-norm honest rows with cap >= 1: scale is exactly 1.0."""
+    rng = np.random.default_rng(6)
+    rows = rng.normal(size=(5, 8)).astype(np.float32)
+    rows /= np.linalg.norm(rows, axis=1, keepdims=True)
+    frames = jnp.asarray(rows)
+    alive = jnp.ones(5, bool)
+    out = np.asarray(aggregators.norm_capped_sum(frames, alive, 1.5))
+    np.testing.assert_array_equal(out, np.asarray(jnp.sum(frames, axis=0)))
+
+
+def test_norm_cap_bounds_single_row_influence():
+    """One huge row moves the sum by at most cap * median live norm."""
+    rng = np.random.default_rng(7)
+    rows = rng.normal(size=(9, 7)).astype(np.float32)
+    rows /= np.linalg.norm(rows, axis=1, keepdims=True)  # median norm = 1
+    frames = jnp.asarray(rows)
+    boosted = frames.at[0].multiply(1e6)
+    alive = jnp.ones(9, bool)
+    out = np.asarray(aggregators.norm_capped_sum(boosted, alive, 1.5))
+    honest = np.asarray(frames)[1:].sum(axis=0)  # scale exactly 1.0
+    assert np.linalg.norm(out - honest) <= 1.5 * 1.0001
+
+
+def test_norm_cap_zeroes_nonfinite_rows():
+    frames = _rand_frames(8, m=6)
+    poisoned = frames.at[1].set(jnp.nan).at[4].set(jnp.inf)
+    alive = jnp.ones(6, bool)
+    out = np.asarray(aggregators.norm_capped_sum(poisoned, alive, 10.0))
+    assert np.isfinite(out).all()
+    keep = np.asarray(frames)[[0, 2, 3, 5]]
+    np.testing.assert_allclose(out, keep.sum(axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_robust_combine_unknown_aggregator_raises():
+    with pytest.raises(ValueError, match="aggregator"):
+        aggregators.robust_combine(jnp.ones((3, 4)), jnp.ones(3, bool), 3.0,
+                                   aggregator="blockchain")
+
+
+def test_clip_frame_power_caps_energy_and_passes_honest_rows():
+    frames = jnp.asarray([[3.0, 4.0], [30.0, 40.0]])  # energies 25, 2500
+    out = np.asarray(aggregators.clip_frame_power(frames, 100.0))
+    np.testing.assert_array_equal(out[0], np.asarray(frames)[0])  # scale 1.0
+    np.testing.assert_allclose(float(np.sum(out[1] ** 2)), 100.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bitwise neutrality of the robust path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mk", [_adsgd, _ddsgd], ids=["analog", "digital"])
+def test_robust_flag_with_zero_rates_is_bitwise_noop(data, mk):
+    """robust=True + all rates zero + defences off == the default path."""
+    (xd, yd), (xte, yte) = data
+    r0 = run_compiled(xd, yd, xte, yte, mk(), STEPS)
+    r1 = run_compiled(xd, yd, xte, yte, mk(robust=True), STEPS)
+    np.testing.assert_array_equal(np.asarray(r0.losses),
+                                  np.asarray(r1.losses))
+    np.testing.assert_array_equal(np.asarray(r0.accs), np.asarray(r1.accs))
+
+
+# ---------------------------------------------------------------------------
+# fault semantics through the drivers
+# ---------------------------------------------------------------------------
+
+
+def _one_round(cfg, grads, deltas, t=0):
+    sch = get_scheme(cfg, grads.shape[1], grads.shape[0])
+    ctx = MACContext(m=grads.shape[0], fading=cfg.fading, csi=sch.csi)
+    key = round_keys(STEPS)[t]
+    return round_masked(sch, grads, deltas, t, key,
+                        jnp.ones(grads.shape[0], jnp.float32), ctx)
+
+
+def test_stale_fault_equals_zero_gradients():
+    """fault_kind=stale at rate 1 == every device sending g=0 (EF replay)."""
+    rng = np.random.default_rng(0)
+    grads = jnp.asarray(rng.normal(size=(M, 64)), jnp.float32)
+    deltas = jnp.asarray(rng.normal(size=(M, 64)), jnp.float32)
+    g1, d1, _ = _one_round(_ddsgd(fault_rate=1.0, fault_kind="stale"),
+                           grads, deltas)
+    g2, d2, _ = _one_round(_ddsgd(robust=True), jnp.zeros_like(grads),
+                           deltas)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_dropout_fault_banks_whole_update_digital():
+    """A dropped digital device banks g + delta (silent_state) untransmitted."""
+    rng = np.random.default_rng(1)
+    grads = jnp.asarray(rng.normal(size=(M, 64)), jnp.float32)
+    deltas = jnp.asarray(rng.normal(size=(M, 64)), jnp.float32)
+    ghat, new_deltas, _ = _one_round(
+        _ddsgd(fault_rate=1.0, fault_kind="dropout"), grads, deltas)
+    np.testing.assert_array_equal(np.asarray(ghat),
+                                  np.zeros_like(np.asarray(ghat)))
+    np.testing.assert_allclose(np.asarray(new_deltas),
+                               np.asarray(grads + deltas), rtol=1e-6)
+
+
+def test_full_erasure_freezes_training(data):
+    """erasure_prob=1: every digital packet is lost, the model never moves."""
+    (xd, yd), (xte, yte) = data
+    run = run_compiled(xd, yd, xte, yte, _ddsgd(erasure_prob=1.0), STEPS)
+    assert np.ptp(np.asarray(run.losses)) == 0.0
+
+
+def test_nan_frame_faults_reach_the_mac(data):
+    """Poisoned frames survive sparsification: unguarded runs go non-finite."""
+    (xd, yd), (xte, yte) = data
+    for mk in (_adsgd, _ddsgd):
+        run = run_compiled(xd, yd, xte, yte,
+                           mk(fault_rate=0.4, fault_kind="nan"), STEPS)
+        assert not np.isfinite(np.asarray(run.losses)).all(), mk.__name__
+
+
+def test_fault_metrics_reported(data):
+    (xd, yd), (xte, yte) = data
+    run = run_compiled(xd, yd, xte, yte,
+                       _adsgd(byzantine_frac=0.4, fault_rate=0.3,
+                              fault_kind="dropout"), STEPS, eval_every=1)
+    byz = [m["byz_frac"] for m in run.metrics]
+    hit = [m["fault_frac"] for m in run.metrics]
+    assert max(byz) > 0 and max(hit) > 0
+
+
+# ---------------------------------------------------------------------------
+# guardrails
+# ---------------------------------------------------------------------------
+
+
+def test_guard_skips_nonfinite_rounds(data):
+    """The skip rail keeps a NaN-poisoned run finite end to end."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(fault_rate=0.4, fault_kind="nan")
+    run = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=1,
+                       guard=guards.GuardConfig(skip_nonfinite=True))
+    assert np.isfinite(np.asarray(run.losses)).all()
+    assert sum(m["guard_skipped"] for m in run.metrics) >= 1
+
+
+def test_guard_zero_faults_keeps_training(data):
+    """With nothing to guard against, a guarded run still trains."""
+    (xd, yd), (xte, yte) = data
+    plain = run_compiled(xd, yd, xte, yte, _adsgd(), STEPS)
+    guarded = run_compiled(xd, yd, xte, yte, _adsgd(), STEPS,
+                           guard=guards.GuardConfig(skip_nonfinite=True))
+    assert sum(m["guard_skipped"] for m in guarded.metrics) == 0
+    np.testing.assert_allclose(np.asarray(guarded.losses),
+                               np.asarray(plain.losses), rtol=1e-5)
+
+
+def test_divergence_backoff_reduces_lr_scale(data):
+    """An aggressive divergence threshold fires the backoff + cooldown."""
+    (xd, yd), (xte, yte) = data
+    g = guards.GuardConfig(divergence_factor=1e-4, lr_backoff=0.5,
+                           cooldown=2)
+    run = run_compiled(xd, yd, xte, yte, _adsgd(), STEPS, eval_every=1,
+                       guard=g)
+    assert sum(m["guard_backoff"] for m in run.metrics) >= 1
+    assert run.metrics[-1]["guard_lr_scale"] < 1.0
+    # cooldown: backoffs cannot fire on consecutive rounds
+    fires = [m["guard_backoff"] for m in run.metrics]
+    assert all(not (a and b) for a, b in zip(fires, fires[1:]))
+
+
+def test_update_clip_bounds_applied_update():
+    """The clamp rail caps the decoded update's L2 norm before Adam."""
+    from repro.optim.optim import Optimizer
+    from repro.train.paper_repro import init_linear
+
+    params = init_linear(8, 3, jax.random.PRNGKey(0))
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    opt = Optimizer(name="sgd", lr=1.0)
+    ghat = jnp.full_like(flat, 100.0)
+    g = guards.GuardConfig(update_clip=1.0, skip_nonfinite=False)
+    p1, _, _, _, _, _ = guarded_step_ref = guards.guarded_step(
+        g, guards.init_guard_state(), opt, params, opt.init(params), ghat,
+        unravel, extras=(), old_extras=(), loss_fn=lambda p: jnp.float32(0.0))
+    moved = jax.flatten_util.ravel_pytree(p1)[0] - flat
+    np.testing.assert_allclose(float(jnp.linalg.norm(moved)), 1.0, rtol=1e-5)
+    del guarded_step_ref
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def test_checkpointed_run_bitwise_equals_plain(data, tmp_path):
+    """Segmenting the scan (with a guard in the carry) changes nothing."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(byzantine_frac=0.25)
+    g = guards.GuardConfig(skip_nonfinite=True)
+    full = run_compiled(xd, yd, xte, yte, cfg, STEPS, guard=g)
+    seg = run_compiled(xd, yd, xte, yte, cfg, STEPS, guard=g,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    np.testing.assert_array_equal(np.asarray(full.losses),
+                                  np.asarray(seg.losses))
+    np.testing.assert_array_equal(np.asarray(full.accs),
+                                  np.asarray(seg.accs))
+
+
+def test_interrupted_resume_bitwise_equals_uninterrupted(data, tmp_path):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(byzantine_frac=0.25)
+    full = run_compiled(xd, yd, xte, yte, cfg, STEPS)
+    part = run_compiled(xd, yd, xte, yte, cfg, STEPS,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                        stop_after_step=3)
+    assert part is None  # interrupted at the first boundary past step 3
+    assert os.path.exists(os.path.join(str(tmp_path), "engine_ckpt.npz"))
+    res = run_compiled(xd, yd, xte, yte, cfg, STEPS,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                       resume=True)
+    np.testing.assert_array_equal(np.asarray(full.losses),
+                                  np.asarray(res.losses))
+    np.testing.assert_array_equal(np.asarray(full.accs),
+                                  np.asarray(res.accs))
+    for k in full.metrics[-1]:
+        np.testing.assert_array_equal(
+            np.asarray([m[k] for m in full.metrics]),
+            np.asarray([m[k] for m in res.metrics]), err_msg=k)
+
+
+def test_resume_without_snapshot_starts_fresh(data, tmp_path):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd()
+    full = run_compiled(xd, yd, xte, yte, cfg, STEPS)
+    res = run_compiled(xd, yd, xte, yte, cfg, STEPS,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=4,
+                       resume=True)
+    np.testing.assert_array_equal(np.asarray(full.losses),
+                                  np.asarray(res.losses))
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+
+
+def test_byzantine_sweep_matches_per_point_runs(data):
+    """A vmapped byzantine_frac grid == the per-point compiled runs."""
+    (xd, yd), (xte, yte) = data
+    base = _ddsgd(aggregator="norm_cap", norm_cap=1.5, byz_scale=20.0)
+    res = run_sweep((xd, yd), (xte, yte), base,
+                    {"byzantine_frac": [0.0, 0.25]}, steps=STEPS,
+                    eval_every=1)
+    for bf in (0.0, 0.25):
+        pt = run_compiled(xd, yd, xte, yte,
+                          dataclasses.replace(base, robust=True,
+                                              byzantine_frac=bf), STEPS,
+                          eval_every=1)
+        rec = res.record(byzantine_frac=bf)
+        np.testing.assert_allclose(rec["losses"], np.asarray(pt.losses),
+                                   rtol=1e-6)
+
+
+def test_robust_axes_are_registered_and_validated(data):
+    (xd, yd), (xte, yte) = data
+    for ax in ROBUST_VMAP_AXES:
+        assert hasattr(get_scheme(_adsgd(), 10, M), ax), ax
+    with pytest.raises(KeyError, match="unknown sweep axis"):
+        run_sweep((xd, yd), (xte, yte), _adsgd(),
+                  {"byzantine_fraction": [0.1]}, steps=2)

@@ -1,0 +1,116 @@
+"""Property tests for the robust aggregators (hypothesis-driven).
+
+The deterministic counterparts live in tests/test_robust.py; these sweep
+randomised shapes/masks/fractions.  The exact-equality property uses
+integer-valued floats: summing integers (within the float32 exact range)
+is associative, so ``trimmed_mean`` at ``trim_frac=0`` must equal the
+arithmetic mean *exactly*, not just to tolerance — pinning that the rank
+window covers every live row.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'dev' extra "
+    "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.robust import aggregators  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _frames_and_alive(seed, m, s, dead_frac):
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.normal(size=(m, s)), jnp.float32)
+    alive = jnp.asarray(rng.random(m) >= dead_frac, bool)
+    # degenerate all-dead masks are the drivers' empty-cohort case; keep
+    # at least one live row so the reference reductions are defined
+    if not bool(alive.any()):
+        alive = alive.at[0].set(True)
+    return frames, alive
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 9),
+       st.floats(0.0, 0.49), st.floats(0.0, 0.6))
+def test_trimmed_mean_within_live_bounds(seed, m, s, trim, dead):
+    """Per coordinate, the trimmed mean lies in [min, max] of live rows."""
+    frames, alive = _frames_and_alive(seed, m, s, dead)
+    out = np.asarray(aggregators.trimmed_mean(frames, alive, trim))
+    live = np.asarray(frames)[np.asarray(alive)]
+    assert (out >= live.min(axis=0) - 1e-5).all()
+    assert (out <= live.max(axis=0) + 1e-5).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 9),
+       st.floats(0.0, 0.49))
+def test_trimmed_mean_permutation_invariant(seed, m, s, trim):
+    """Reordering devices cannot change a rank-windowed combine."""
+    frames, alive = _frames_and_alive(seed, m, s, 0.3)
+    perm = jnp.asarray(np.random.default_rng(seed ^ 0xA5).permutation(m))
+    a = np.asarray(aggregators.trimmed_mean(frames, alive, trim))
+    b = np.asarray(aggregators.trimmed_mean(frames[perm], alive[perm], trim))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12), st.integers(1, 9))
+def test_trimmed_mean_trim_zero_is_exact_mean_on_integers(seed, m, s):
+    """trim_frac=0 covers every live row: exact equality on integer data.
+
+    Integer sums are exact in float32 regardless of association, so the
+    sorted-and-summed trimmed mean and the plain mean divide the *same*
+    float32 sum by the same count — bitwise equality, pinning that the
+    zero-trim rank window is [0, n-1].
+    """
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.integers(-100, 100, size=(m, s)), jnp.float32)
+    alive = jnp.ones(m, bool)
+    out = np.asarray(aggregators.trimmed_mean(frames, alive, 0.0))
+    ref = np.asarray(frames).sum(axis=0) / np.float32(m)
+    np.testing.assert_array_equal(out, ref)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 9),
+       st.floats(0.0, 0.5))
+def test_median_permutation_invariant_and_bounded(seed, m, s, dead):
+    frames, alive = _frames_and_alive(seed, m, s, dead)
+    perm = jnp.asarray(np.random.default_rng(seed ^ 0x5A).permutation(m))
+    a = np.asarray(aggregators.median(frames, alive))
+    b = np.asarray(aggregators.median(frames[perm], alive[perm]))
+    np.testing.assert_array_equal(a, b)
+    live = np.asarray(frames)[np.asarray(alive)]
+    ref = np.median(live, axis=0)
+    np.testing.assert_allclose(a, ref, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 12), st.integers(1, 9),
+       st.floats(0.5, 3.0))
+def test_norm_cap_sum_bounded_by_capped_row_norms(seed, m, s, cap):
+    """The aggregate norm is at most the sum of capped live-row norms.
+
+    Each live row enters the sum scaled so its norm is at most
+    ``min(||row||, cap * median live norm)`` — the triangle inequality
+    then bounds the aggregate, however adversarial any single row is.
+    """
+    frames, alive = _frames_and_alive(seed, m, s, 0.2)
+    out = np.asarray(aggregators.norm_capped_sum(frames, alive, cap))
+    live = np.asarray(frames)[np.asarray(alive)]
+    nrm = np.linalg.norm(live, axis=1)
+    cap_abs = cap * np.median(nrm)
+    assert np.linalg.norm(out) <= np.minimum(nrm, cap_abs).sum() * (
+        1 + 1e-5) + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 10), st.integers(1, 16),
+       st.floats(1.0, 1e4))
+def test_clip_frame_power_never_exceeds_cap(seed, m, s, p_max):
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.normal(scale=50.0, size=(m, s)), jnp.float32)
+    out = np.asarray(aggregators.clip_frame_power(frames, p_max))
+    energy = np.sum(out * out, axis=-1)
+    assert (energy <= p_max * (1 + 1e-4)).all()
+    # rows already under the cap pass through bitwise
+    under = np.sum(np.asarray(frames) ** 2, axis=-1) <= p_max
+    np.testing.assert_array_equal(out[under], np.asarray(frames)[under])
