@@ -1,0 +1,162 @@
+"""Fig. 12 (beyond-paper): local-compute algorithms under non-IID data.
+
+Accuracy per *uplink use*: with E local epochs per round every point on
+the x-axis costs the same channel budget, so a local-compute algorithm
+pays for extra device SGD only with device FLOPs — unless client drift
+eats the gain.  The sweep crosses the local-compute axis
+(``repro.local``: FedAvg-E / FedProx / FedDyn) with the MAC scheme
+(A-DSGD analog, D-DSGD digital) on a Dirichlet ``beta = 0.25`` split
+over M = 20 devices with B = 100 samples each — heavy label skew and
+small shards, where E > 1 epochs at a drift-inducing local step size
+pull each device hard toward its own skewed optimum, while the proximal
+(FedProx) and dual-corrected (FedDyn) updates stay anchored to the
+global model.
+
+Each transport runs at a power budget inside its operating regime, so
+the within-scheme algorithm comparison is not confounded by the MAC:
+
+* A-DSGD is norm-adaptive (``alpha = P / (||g_tilde||^2 + 1)``, eq. 13):
+  the ``+1`` is the scale slot's share of the budget, so the anchored
+  algorithms' *smaller* pseudo-gradients — ``(w0 - wE) / (lr E)``
+  shrinks as the anchor caps ``||w0 - wE||`` — waste power on the slot
+  at the paper's P-bar and decode noisily.  ``P_AVG_ANALOG`` keeps the
+  body SNR above that floor at multi-epoch delta scales.
+* D-DSGD stays at the paper-scale budget: the bit-limited regime where
+  drift additionally degrades through the quantizer (drifted deltas
+  compress worse), which is where the digital transport actually runs.
+
+The whole (algorithm, E, seed) grid rides the sweep engine: ``local`` is
+a static axis (one compiled program per algorithm), ``local_epochs`` and
+the seed replicas are vmapped — the multi-epoch scan is compiled once at
+``max(E)`` and traced per point (docs/DESIGN.md §11).
+
+Asserts (the CI smoke gates for the local-compute subsystem):
+
+* at E = 4 epochs FedProx and FedDyn each retain strictly more accuracy
+  than FedAvg-E, under BOTH the analog and the digital transport;
+* every algorithm still trains (final accuracy above chance) — the axis
+  composes with the MAC schemes rather than replacing them.
+
+Timings land in ``BENCH_local.json`` (committed; gated by
+check_regression.py like the other BENCH files).
+
+Usage:
+    PYTHONPATH=src python benchmarks/fig12_local.py          # figure scale
+    SMOKE=1 PYTHONPATH=src python benchmarks/fig12_local.py  # CI leg
+"""
+
+import json
+import os
+import sys
+
+# allow `python benchmarks/fig12_local.py` from the repo root (script mode
+# puts benchmarks/ itself on sys.path, not the package's parent)
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, REPO_ROOT)
+
+from benchmarks.common import SCALE, dataset, emit  # noqa: E402
+
+SMOKE = bool(int(os.environ.get("SMOKE", "0")))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_local.json")
+
+#: Dirichlet concentration: beta = 0.25 is the heavy-skew regime where
+#: client drift separates the algorithms
+BETA = 0.25
+#: many small shards — drift needs per-device optima far from the mean
+M_DEV, B_DEV = 20, 100
+#: local epochs on the vmapped axis (E = 1 is the paper's device)
+EPOCHS = (1, 2, 4)
+#: the three multi-epoch algorithms (all share one data/seed pairing)
+ALGOS = ("fedavg", "fedprox", "feddyn")
+#: proximal strength / dual step — carried in the base config; each
+#: algorithm reads only its own knob (fedavg reads neither)
+PROX_MU = 0.5
+DYN_ALPHA = 0.1
+#: the drift-inducing local step size (multi-epoch full-batch GD)
+LOCAL_LR = 0.6
+#: analog power budget: body SNR above the scale-slot floor (docstring)
+P_AVG_ANALOG = 50_000.0
+#: seed replicas averaged per grid point
+SEEDS = (0, 1) if SMOKE else (0, 1, 2)
+
+
+def main(collect=None):
+    from benchmarks.common import ota
+    from repro.experiments import run_sweep
+
+    steps = 16 if SMOKE else SCALE.steps
+    dev, test = dataset(partition="dirichlet", beta=BETA, m=M_DEV, b=B_DEV)
+    rows, summary, bench = [], [], {
+        "smoke": SMOKE,
+        "beta": BETA,
+        "epochs": list(EPOCHS),
+    }
+    finals = {}  # (scheme, algo) -> {E: seed-averaged final accuracy}
+
+    for scheme in ("a_dsgd", "d_dsgd"):
+        base = ota(scheme, total_steps=steps, prox_mu=PROX_MU,
+                   dyn_alpha=DYN_ALPHA,
+                   **({"p_avg": P_AVG_ANALOG} if scheme == "a_dsgd" else {}))
+        res = run_sweep(dev, test, base,
+                        {"local": list(ALGOS),
+                         "local_epochs": list(EPOCHS),
+                         "seed": list(SEEDS)},
+                        steps=steps, lr=SCALE.lr, local_lr=LOCAL_LR,
+                        eval_every=SCALE.eval_every)
+        for algo in ALGOS:
+            finals[(scheme, algo)] = {}
+            for e in EPOCHS:
+                recs = [r for r in res.records
+                        if r["local"] == algo and r["local_epochs"] == e]
+                accs = [rec["accs"] for rec in recs]
+                mean_accs = [sum(col) / len(col) for col in zip(*accs)]
+                for i, acc in enumerate(mean_accs):
+                    step = min(i * SCALE.eval_every, steps - 1)
+                    rows.append(f"fig12,{scheme}_{algo}_E{e},{step},"
+                                f"{acc:.4f}")
+                finals[(scheme, algo)][e] = mean_accs[-1]
+                us = sum(rec["us_per_call"] for rec in recs) / len(recs)
+                name = f"fig12_{scheme}_{algo}_E{e}"
+                summary.append((name, us, mean_accs[-1]))
+                bench[f"{name}_us_per_round"] = round(us / steps, 1)
+                bench[f"{name}_final_acc"] = round(mean_accs[-1], 4)
+
+    emit(rows)
+    e_hi = max(EPOCHS)
+    for scheme in ("a_dsgd", "d_dsgd"):
+        f = {a: finals[(scheme, a)] for a in ALGOS}
+        print(f"# {scheme} @E={e_hi}: fedavg {f['fedavg'][e_hi]:.4f}  "
+              f"fedprox {f['fedprox'][e_hi]:.4f}  "
+              f"feddyn {f['feddyn'][e_hi]:.4f}  "
+              f"(fedavg E=1 {f['fedavg'][1]:.4f})")
+
+    # --- the local-compute claims this figure pins -----------------------
+    checks = {}
+    for scheme in ("a_dsgd", "d_dsgd"):
+        f = {a: finals[(scheme, a)] for a in ALGOS}
+        # drift control: the anchored algorithms strictly beat plain
+        # FedAvg-E where it drifts hardest
+        checks[f"{scheme}_fedprox_beats_fedavg_E{e_hi}"] = \
+            f["fedprox"][e_hi] > f["fedavg"][e_hi]
+        checks[f"{scheme}_feddyn_beats_fedavg_E{e_hi}"] = \
+            f["feddyn"][e_hi] > f["fedavg"][e_hi]
+        # composition: every algorithm still trains through this MAC
+        checks[f"{scheme}_all_above_chance"] = all(
+            f[a][e] > 0.15 for a in ALGOS for e in EPOCHS)
+    for name, ok in checks.items():
+        print(f"# fig12 {name}={ok}")
+    if not all(checks.values()):
+        bad = [k for k, v in checks.items() if not v]
+        raise SystemExit(f"fig12: local-compute gates failed: {bad}")
+
+    with open(OUT_PATH, "w") as fh:
+        json.dump(bench, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {OUT_PATH}")
+    if collect is not None:
+        collect.extend(summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

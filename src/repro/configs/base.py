@@ -217,6 +217,17 @@ class OTAConfig:
     norm_cap: float = 1.0          # per-frame L2 cap, norm_cap agg (traced)
     clip_power: bool = False       # static: analog transmit-side power cap
     power_cap: float = 1.5         # cap as a multiple of P_t (traced)
+    # local-compute axis (repro.local): what devices do between uplinks.
+    # ``local`` selects the registered algorithm (static program structure);
+    # ``local_epochs`` / ``prox_mu`` / ``dyn_alpha`` enter the round as one
+    # traced scalar each (LOCAL_VMAP_AXES in repro.experiments.sweep — the
+    # epoch count rides a masked scan bounded by the static grid maximum).
+    # Defaults are the paper's single-SGD-step device and keep every
+    # committed golden byte-identical (docs/DESIGN.md §11).
+    local: str = "sgd"             # sgd | fedavg | fedprox | feddyn
+    local_epochs: int = 1          # E local passes per round (traced count)
+    prox_mu: float = 0.0           # FedProx proximal strength mu (traced)
+    dyn_alpha: float = 0.0         # FedDyn regulariser alpha (traced)
 
     def s_for(self, d: int) -> int:
         return max(2, int(self.s_frac * d))

@@ -12,6 +12,6 @@ from repro.experiments.engine import (  # noqa: F401
     round_masked, run_compiled,
 )
 from repro.experiments.sweep import (  # noqa: F401
-    POP_VMAP_AXES, SCALAR_VMAP_AXES, VMAP_AXES, SweepResult,
-    run_population_sweep, run_sweep,
+    LOCAL_VMAP_AXES, POP_VMAP_AXES, ROBUST_VMAP_AXES, SCALAR_VMAP_AXES,
+    VMAP_AXES, SweepResult, run_population_sweep, run_sweep,
 )

@@ -35,10 +35,13 @@ from repro.configs.base import OTAConfig
 from repro.core import channel
 from repro.core import schemes as schemes_mod
 from repro.core.schemes import MACContext, Scheme, get_scheme, round_simulated
+from repro.local.work import (
+    LOCAL_OVERRIDE_ATTRS, LocalWork, get_local, local_device_grads,
+)
 from repro.optim.optim import Optimizer
 from repro.robust import aggregators, faults, guards
 from repro.train.paper_repro import (
-    accuracy, ce_loss, device_grads, init_linear,
+    accuracy, ce_loss, device_grads, flat_grad_fn, init_linear,
 )
 
 #: base of the per-round key stream; round t of seed 0 uses PRNGKey(1000 + t),
@@ -244,6 +247,13 @@ class CompiledExperiment:
         self.d = flat0.shape[0]
         self.params0 = params
         self.scheme = get_scheme(exp.cfg, self.d, m)
+        self.localwork = get_local(exp.cfg, exp.local_lr)
+        if not self.localwork.identity and exp.local_steps > 1:
+            raise ValueError(
+                "local_steps > 1 (the legacy FedAvg path) conflicts with "
+                f"the configured local algorithm {exp.cfg.local!r} at "
+                f"local_epochs={exp.cfg.local_epochs}; use cfg.local_epochs")
+        self._grad_fn = flat_grad_fn(self.unravel)
         self.opt = Optimizer(name=exp.optimizer, lr=exp.lr)
         self.xd, self.yd = jnp.asarray(x_dev), jnp.asarray(y_dev)
         self.xt, self.yt = jnp.asarray(x_test), jnp.asarray(y_test)
@@ -256,21 +266,33 @@ class CompiledExperiment:
         carry = (self.params0, self.opt.init(self.params0),
                  jnp.zeros((self.m, self.d), jnp.float32),
                  jnp.zeros((self.m, self.d), jnp.float32))
+        if self.localwork.has_dual:
+            carry = carry + (self.localwork.init_dual(self.m, self.d),)
         if self.exp.guard is not None:
             carry = carry + (guards.init_guard_state(),)
         return carry
 
-    def _round(self, sch: Scheme, carry, t, key, mask):
+    def _round(self, sch: Scheme, lw: LocalWork, carry, t, key, mask):
         exp = self.exp
-        if exp.guard is not None:
-            params, opt_state, deltas, momenta, gstate = carry
+        params, opt_state, deltas, momenta = carry[:4]
+        duals = carry[4] if lw.has_dual else None
+        gstate = carry[-1] if exp.guard is not None else None
+        old_extras = (deltas, momenta) + ((duals,) if lw.has_dual else ())
+        if lw.identity:
+            # the pre-axis jaxpr, byte-for-byte — pins the goldens
+            grads, momenta = device_grads(
+                params, self.unravel, self.xd, self.yd, momenta,
+                local_steps=exp.local_steps, local_lr=exp.local_lr,
+                momentum_correction=exp.momentum_correction)
         else:
-            params, opt_state, deltas, momenta = carry
-        old_extras = (deltas, momenta)
-        grads, momenta = device_grads(
-            params, self.unravel, self.xd, self.yd, momenta,
-            local_steps=exp.local_steps, local_lr=exp.local_lr,
-            momentum_correction=exp.momentum_correction)
+            grads, momenta, new_duals = local_device_grads(
+                lw, self._grad_fn, params, self.xd, self.yd, momenta,
+                duals, momentum_correction=exp.momentum_correction)
+            if lw.has_dual:
+                # padded phantom devices do not exist: their dual must not
+                # evolve (same keep-rule round_masked applies to deltas)
+                duals = (new_duals if mask is None else
+                         jnp.where((mask > 0)[:, None], new_duals, duals))
         if mask is None and not sch.robust_on:
             ghat, deltas, met = round_simulated(sch, grads, deltas, t, key,
                                                 self.ctx)
@@ -281,21 +303,22 @@ class CompiledExperiment:
                      else jnp.ones((self.m,), jnp.float32))
             ghat, deltas, met = round_masked(sch, grads, deltas, t, key,
                                              rmask, self.ctx)
+        extras = (deltas, momenta) + ((duals,) if lw.has_dual else ())
         if exp.guard is None:
             params, opt_state = self.opt.apply(params, self.unravel(ghat),
                                                opt_state)
             out = {"acc": accuracy(params, self.xt, self.yt),
                    "loss": ce_loss(params, self.xt, self.yt),
                    "metrics": met}
-            return (params, opt_state, deltas, momenta), out
-        (params, opt_state, (deltas, momenta), gstate, loss,
+            return (params, opt_state) + extras, out
+        (params, opt_state, extras, gstate, loss,
          gmet) = guards.guarded_step(
             exp.guard, gstate, self.opt, params, opt_state, ghat,
-            self.unravel, extras=(deltas, momenta), old_extras=old_extras,
+            self.unravel, extras=extras, old_extras=old_extras,
             loss_fn=lambda p: ce_loss(p, self.xt, self.yt))
         out = {"acc": accuracy(params, self.xt, self.yt), "loss": loss,
                "metrics": {**met, **gmet}}
-        return (params, opt_state, deltas, momenta, gstate), out
+        return (params, opt_state) + tuple(extras) + (gstate,), out
 
     def _scan(self, overrides, keys, mask):
         carry, outs = self.run_segment(overrides, keys, mask,
@@ -313,13 +336,24 @@ class CompiledExperiment:
         (t, key))``), so splitting a run at any boundary and resuming from
         the saved carry reproduces the uninterrupted run bitwise.  Returns
         ``(carry, outs)``.
+
+        ``overrides`` splits between the scheme (schedule arrays, channel /
+        robustness scalars) and the local-work knobs
+        (``LOCAL_OVERRIDE_ATTRS``) — each lands on its own carrier via the
+        matching ``with_overrides``.
         """
-        sch = (self.scheme.with_overrides(**overrides) if overrides
+        lw_ov = {k: v for k, v in overrides.items()
+                 if k in LOCAL_OVERRIDE_ATTRS}
+        sch_ov = {k: v for k, v in overrides.items()
+                  if k not in LOCAL_OVERRIDE_ATTRS}
+        sch = (self.scheme.with_overrides(**sch_ov) if sch_ov
                else self.scheme)
+        lw = (self.localwork.with_overrides(**lw_ov) if lw_ov
+              else self.localwork)
 
         def body(carry, inp):
             t, key = inp
-            return self._round(sch, carry, t, key, mask)
+            return self._round(sch, lw, carry, t, key, mask)
 
         ts = t0 + jnp.arange(keys.shape[0])
         return jax.lax.scan(body, carry, (ts, keys))

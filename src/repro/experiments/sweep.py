@@ -50,6 +50,7 @@ from repro.core import power
 from repro.experiments.engine import (
     CompiledExperiment, Experiment, eval_indices, round_keys,
 )
+from repro.local.work import LOCAL_OVERRIDE_ATTRS
 
 #: axes realised as vmapped per-point arrays on one trace
 VMAP_AXES = ("p_avg", "power_schedule", "seed", "m_active")
@@ -83,6 +84,17 @@ POP_VMAP_AXES = ("avail_rate", "straggler_deadline", "k_active",
 ROBUST_VMAP_AXES = ("byzantine_frac", "fault_rate", "erasure_prob",
                     "byz_scale", "trim_frac", "norm_cap", "power_cap")
 
+#: local-compute knobs (repro.local) — traced scalars on the LocalWork
+#: carrier, swapped per grid point via ``LocalWork.with_overrides``.  The
+#: epoch count is traced (a ``e < local_epochs`` cutoff inside a scan of
+#: static length ``max_epochs``), so a whole (E, mu, alpha) grid rides one
+#: vmapped program; sweeping ``local_epochs`` bumps the static
+#: ``max_epochs`` bound to the grid maximum before tracing (the ``q_max``
+#: pattern — discarded epochs leave the carry untouched bitwise).  The
+#: algorithm *kind* (``local``) selects program structure and stays a
+#: static axis (docs/DESIGN.md §11).
+LOCAL_VMAP_AXES = LOCAL_OVERRIDE_ATTRS
+
 
 @dataclass
 class SweepResult:
@@ -105,7 +117,8 @@ class SweepResult:
 
 def _validate_axes(axes: Dict[str, Sequence], base: OTAConfig) -> None:
     cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
-    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES
+    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES \
+        + LOCAL_VMAP_AXES
     for name, values in axes.items():
         if name not in vmapped and name not in cfg_fields:
             raise KeyError(
@@ -118,7 +131,7 @@ def _validate_axes(axes: Dict[str, Sequence], base: OTAConfig) -> None:
 def run_sweep(dev_data, test_data, base: OTAConfig,
               axes: Dict[str, Sequence], *, steps: int, lr: float = 1e-3,
               eval_every: int = 10, optimizer: str = "adam", seed: int = 0,
-              use_kernel: bool = False) -> SweepResult:
+              local_lr: float = 0.1, use_kernel: bool = False) -> SweepResult:
     """Run the cartesian grid of ``axes`` over ``base``.
 
     dev_data = (x_dev (M, B, dim), y_dev), test_data = (x_test, y_test).
@@ -137,7 +150,8 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
     if masked and max(axes["m_active"]) > m_pad:
         raise ValueError(f"m_active values must be <= M_pad = {m_pad}")
 
-    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES
+    vmapped = VMAP_AXES + SCALAR_VMAP_AXES + ROBUST_VMAP_AXES \
+        + LOCAL_VMAP_AXES
     static_names = [k for k in axes if k not in vmapped]
     vmap_names = [k for k in axes if k in vmapped]
     records: List[Dict[str, Any]] = []
@@ -147,17 +161,23 @@ def run_sweep(dev_data, test_data, base: OTAConfig,
         static_d = dict(zip(static_names, static_vals))
         cfg = dataclasses.replace(base, **static_d)
         exp = Experiment(cfg=cfg, steps=steps, lr=lr, eval_every=eval_every,
-                         optimizer=optimizer, seed=seed,
+                         optimizer=optimizer, seed=seed, local_lr=local_lr,
                          use_kernel=use_kernel)
         ce = CompiledExperiment(xd, yd, xt, yt, exp)
         digital = hasattr(ce.scheme, "q_sched")
+        if "local_epochs" in axes:
+            # the static scan bound must cover the whole grid (the q_max
+            # pattern): points at E < max run the extra epochs as bitwise
+            # no-ops behind the traced cutoff
+            ce.localwork.max_epochs = max(int(max(axes["local_epochs"])), 1)
 
         grid = ([dict(zip(vmap_names, vals)) for vals in itertools.product(
             *[axes[k] for k in vmap_names])] if vmap_names else [{}])
 
         # --- per-point schedule arrays (host precompute) -----------------
         scalar_names = [k for k in vmap_names
-                        if k in SCALAR_VMAP_AXES or k in ROBUST_VMAP_AXES]
+                        if k in SCALAR_VMAP_AXES or k in ROBUST_VMAP_AXES
+                        or k in LOCAL_VMAP_AXES]
         p_rows, q_rows, key_rows, mask_rows = [], [], [], []
         scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
         for point in grid:
@@ -223,6 +243,7 @@ def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
                          axes: Dict[str, Sequence], *, steps: int,
                          lr: float = 1e-3, eval_every: int = 10,
                          optimizer: str = "adam", seed: int = 0,
+                         local_lr: float = 0.1,
                          use_kernel: bool = False) -> SweepResult:
     """:func:`run_sweep` over the sampled-cohort population engine.
 
@@ -247,7 +268,7 @@ def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
     cfg_fields = {f.name for f in dataclasses.fields(OTAConfig)}
     pop_fields = {f.name for f in dataclasses.fields(PopulationConfig)}
     vmapped = ("p_avg", "power_schedule", "seed") + SCALAR_VMAP_AXES \
-        + POP_VMAP_AXES + ROBUST_VMAP_AXES
+        + POP_VMAP_AXES + ROBUST_VMAP_AXES + LOCAL_VMAP_AXES
     for name, values in axes.items():
         if name == "m_active":
             raise KeyError(
@@ -279,16 +300,20 @@ def run_population_sweep(data, test_data, base: OTAConfig, base_pop,
         exp = PopulationExperiment(cfg=cfg, pop=pop, steps=steps, lr=lr,
                                    eval_every=eval_every,
                                    optimizer=optimizer, seed=seed,
+                                   local_lr=local_lr,
                                    use_kernel=use_kernel)
         cp = CompiledPopulation(data, xt, yt, exp)
         digital = hasattr(cp.scheme, "q_sched")
+        if "local_epochs" in axes:
+            # static scan bound covers the grid (see run_sweep)
+            cp.localwork.max_epochs = max(int(max(axes["local_epochs"])), 1)
 
         grid = ([dict(zip(vmap_names, vals)) for vals in itertools.product(
             *[axes[k] for k in vmap_names])] if vmap_names else [{}])
 
         scalar_names = [k for k in vmap_names
                         if k in SCALAR_VMAP_AXES or k in POP_VMAP_AXES
-                        or k in ROBUST_VMAP_AXES]
+                        or k in ROBUST_VMAP_AXES or k in LOCAL_VMAP_AXES]
         p_rows, q_rows, key_rows = [], [], []
         scalar_rows: Dict[str, List[float]] = {k: [] for k in scalar_names}
         for point in grid:

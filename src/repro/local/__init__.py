@@ -1,0 +1,15 @@
+"""repro.local: the local-compute axis (FedAvg-E / FedProx / FedDyn).
+
+What each device does between two uplink uses, as an axis orthogonal to
+the MAC scheme registry — see :mod:`repro.local.work` and
+docs/DESIGN.md §11.
+"""
+
+from repro.local.work import (  # noqa: F401
+    LOCAL_OVERRIDE_ATTRS,
+    LOCAL_REGISTRY,
+    LocalWork,
+    get_local,
+    local_device_grads,
+    register_local,
+)

@@ -1,0 +1,246 @@
+"""Local-compute axis: what a device does between two uplink uses.
+
+The paper's device runs exactly ONE SGD step per round and transmits its
+gradient.  Deployed federated systems amortise each expensive uplink over
+``E`` local epochs, with drift correction against the client-drift bias
+that multi-epoch local work introduces under non-IID shards (FedProx's
+proximal term, FedDyn's dynamic regulariser).  This module makes that
+choice an axis *orthogonal* to the MAC scheme: a :class:`LocalWork`
+produces the per-device model delta that feeds the existing
+error-feedback + top-k + projection pipeline, so every registered scheme
+composes with every registered algorithm and the scheme encode/decode
+contract is untouched.
+
+Registered algorithms::
+
+    sgd      E plain SGD steps, transmit the mean gradient (E=1 — the
+             default — is *bitwise* the legacy single-gradient round)
+    fedavg   FedAvg-E: E local epochs, transmit (w0 - wE) / (lr E)
+    fedprox  FedAvg-E with the proximal term (mu/2)||w - w0||^2
+    feddyn   FedAvg-E with a per-device dual (dynamic regulariser); the
+             dual is persistent state — the dense engine carries it in the
+             scan, the population engine banks it in a ``BankedState``
+
+Traced-vs-static split (docs/DESIGN.md §11): ``local`` selects program
+structure and stays static; ``local_epochs`` / ``prox_mu`` / ``dyn_alpha``
+are traced per-round scalars (``LOCAL_OVERRIDE_ATTRS``), swapped per grid
+point via :meth:`LocalWork.with_overrides` exactly like
+``Scheme.with_overrides`` — so a whole (E, mu, alpha) grid rides one
+vmapped program.  The epoch loop is a ``lax.scan`` of *static* length
+``max_epochs`` (the grid maximum) with a traced ``e < local_epochs``
+cutoff; epochs past the cutoff leave the carry untouched, so a grid point
+at E < max_epochs is bitwise the exact-length loop.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Dict, Type
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+LOCAL_REGISTRY: Dict[str, Type["LocalWork"]] = {}
+
+#: LocalWork attributes that ride the vmapped override path (the sweep
+#: engine's ``LOCAL_VMAP_AXES``)
+LOCAL_OVERRIDE_ATTRS = ("local_epochs", "prox_mu", "dyn_alpha")
+
+
+def register_local(name: str):
+    """Class decorator: register a :class:`LocalWork` under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        LOCAL_REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_local(cfg, local_lr: float = 0.1) -> "LocalWork":
+    """Resolve ``cfg.local`` against the registry."""
+    try:
+        cls = LOCAL_REGISTRY[cfg.local]
+    except KeyError:
+        raise KeyError(
+            f"unknown local algorithm {cfg.local!r}; "
+            f"known: {sorted(LOCAL_REGISTRY)}"
+        ) from None
+    return cls(cfg, local_lr)
+
+
+class LocalWork:
+    """Contract for the device-side inner loop.
+
+    Hooks (all on flat ``(d,)`` vectors of ONE device; ``w0`` is the round's
+    global model, ``w`` the local iterate):
+
+    * :meth:`init_dual` — per-device persistent dual state, or ``None``
+    * :meth:`inner_grad` — descent direction at ``w`` given the data
+      gradient ``g`` (the ``inner_step`` of the contract: the driver applies
+      ``w -= lr * inner_grad(...)``)
+    * :meth:`delta_out` — the transmitted pseudo-gradient after E epochs
+    * :meth:`dual_out` — the dual update after E epochs
+
+    ``max_epochs`` is the *static* scan length (sweeps bump it to the grid
+    maximum before tracing, the ``q_max`` pattern); ``local_epochs`` is the
+    *traced* epoch count — values above ``max_epochs`` truncate.
+    """
+
+    name = "?"
+    #: static: this algorithm carries a per-device dual vector
+    has_dual = False
+
+    def __init__(self, cfg, local_lr: float = 0.1):
+        self.cfg = cfg
+        self.lr = float(local_lr)
+        self.max_epochs = max(int(cfg.local_epochs), 1)
+        # traced per-round scalars — vmappable via with_overrides
+        self.local_epochs = jnp.float32(cfg.local_epochs)
+        self.prox_mu = jnp.float32(cfg.prox_mu)
+        self.dyn_alpha = jnp.float32(cfg.dyn_alpha)
+
+    @property
+    def identity(self) -> bool:
+        """Static: configured as the legacy one-gradient-per-round device.
+
+        When true the engines keep their original ``device_grads`` path —
+        the *same jaxpr* as before this axis existed, which is what pins
+        ``local=sgd, local_epochs=1`` bitwise to every committed golden.
+        """
+        return False
+
+    def with_overrides(self, **attrs) -> "LocalWork":
+        """Shallow copy with traced knobs replaced (the sweep hook)."""
+        new = copy.copy(self)
+        for name, value in attrs.items():
+            if name not in LOCAL_OVERRIDE_ATTRS:
+                raise AttributeError(
+                    f"unknown local override {name!r}; traced knobs: "
+                    f"{LOCAL_OVERRIDE_ATTRS}"
+                )
+            setattr(new, name, value)
+        return new
+
+    def init_dual(self, m: int, d: int):
+        """(m, d) initial duals, or ``None`` for dual-free algorithms."""
+        return jnp.zeros((m, d), jnp.float32) if self.has_dual else None
+
+    # ----------------------------------------------------- per-epoch hooks
+    def inner_grad(self, g, w, w0, dual):
+        """Descent direction at the local iterate ``w``."""
+        return g
+
+    def delta_out(self, w0, w_end, g_sum, n_eff):
+        """The transmitted pseudo-gradient (the paper's delta convention:
+        ``flat_local_delta`` transmits ``(w0 - wJ) / (lr J)``)."""
+        return (w0 - w_end) / (self.lr * n_eff)
+
+    def dual_out(self, dual, w0, w_end):
+        """Updated dual after the epoch loop (dual-free: pass-through)."""
+        return dual
+
+
+@register_local("sgd")
+class SGDLocal(LocalWork):
+    """The paper's device, generalised: E plain SGD steps, transmit the
+    mean of the local gradients.  At E=1 the mean is ``g / 1.0 == g``
+    bitwise (IEEE-754: division by one is exact), unlike the
+    iterate-difference form which rounds through a multiply-subtract."""
+
+    @property
+    def identity(self) -> bool:
+        return self.max_epochs == 1
+
+    def delta_out(self, w0, w_end, g_sum, n_eff):
+        return g_sum / n_eff
+
+
+@register_local("fedavg")
+class FedAvgLocal(LocalWork):
+    """FedAvg-E: E local epochs over the device shard, transmit the model
+    delta rescaled to gradient units, ``(w0 - wE) / (lr E)``."""
+
+
+@register_local("fedprox")
+class FedProxLocal(LocalWork):
+    """FedProx: each inner step descends the proximal objective
+    ``f(w) + (mu/2) ||w - w0||^2``.  At ``mu=0`` the added term is
+    ``0 * (w - w0)`` — exactly zero — so fedprox(mu=0) == fedavg."""
+
+    def inner_grad(self, g, w, w0, dual):
+        return g + self.prox_mu * (w - w0)
+
+
+@register_local("feddyn")
+class FedDynLocal(LocalWork):
+    """FedDyn: dynamic regularisation with a per-device dual.
+
+    Inner objective ``f(w) - <dual, w> + (alpha/2)||w - w0||^2``; after the
+    epoch loop the dual absorbs the realised drift,
+    ``dual' = dual - alpha (wE - w0)``.  With zero gradients the iterate
+    never moves and the update telescopes to zero — a fresh (cold-read)
+    device with ``dual = 0`` behaves exactly like FedAvg-E until it drifts,
+    which is why the population engine can bank duals in a direct-mapped
+    ``BankedState`` whose cold slots read zero (docs/DESIGN.md §11).
+    """
+
+    has_dual = True
+
+    def inner_grad(self, g, w, w0, dual):
+        return g + self.dyn_alpha * (w - w0) - dual
+
+    def dual_out(self, dual, w0, w_end):
+        return dual - self.dyn_alpha * (w_end - w0)
+
+
+def local_device_grads(
+    lw: LocalWork,
+    grad_fn,
+    params,
+    xd,
+    yd,
+    momenta,
+    duals=None,
+    *,
+    momentum_correction: float = 0.0,
+):
+    """(M, d) transmitted deltas + updated ``(momenta, duals)``.
+
+    The multi-epoch generalisation of
+    :func:`repro.train.paper_repro.device_grads` — the engines call one or
+    the other based on the static :attr:`LocalWork.identity` gate.
+    ``grad_fn(w_flat, xm, ym) -> (d,)`` is the model's flat-gradient
+    closure (``repro.train.paper_repro.flat_grad_fn``), injected so this
+    module stays model-agnostic.  The per-device epoch loop is a
+    ``lax.scan`` of static length ``lw.max_epochs`` with a traced
+    ``e < local_epochs`` cutoff: discarded epochs leave the carry
+    untouched bitwise, so vmapped ``local_epochs`` grids share one trace.
+    """
+    w0 = jax.flatten_util.ravel_pytree(params)[0]
+    n_eff = jnp.maximum(lw.local_epochs, 1.0)
+
+    def one_device(xm, ym, dual):
+        def body(carry, e):
+            w, g_sum = carry
+            g = grad_fn(w, xm, ym)
+            dvec = lw.inner_grad(g, w, w0, dual)
+            live = e.astype(jnp.float32) < lw.local_epochs
+            w = jnp.where(live, w - lw.lr * dvec, w)
+            g_sum = jnp.where(live, g_sum + dvec, g_sum)
+            return (w, g_sum), None
+
+        (w_end, g_sum), _ = jax.lax.scan(
+            body, (w0, jnp.zeros_like(w0)), jnp.arange(lw.max_epochs)
+        )
+        return lw.delta_out(w0, w_end, g_sum, n_eff), lw.dual_out(dual, w0, w_end)
+
+    deltas, new_duals = jax.vmap(
+        one_device, in_axes=(0, 0, 0 if lw.has_dual else None)
+    )(xd, yd, duals if lw.has_dual else None)
+    if momentum_correction > 0:
+        momenta = momentum_correction * momenta + deltas
+        deltas = momenta
+    return deltas, momenta, new_duals

@@ -45,16 +45,21 @@ from repro.data.partition import PopulationPartition
 from repro.experiments.engine import (
     EngineRun, _subsample, round_keys, round_masked, run_checkpointed,
 )
+from repro.local.work import (
+    LOCAL_OVERRIDE_ATTRS, LocalWork, get_local, local_device_grads,
+)
 from repro.optim.optim import Optimizer
 from repro.robust import faults, guards
 from repro.population import churn, stragglers
 from repro.population.hierarchy import site_mac_sum
 from repro.population.sampler import sample_cohort
 from repro.population.state import (
-    BankedState, PopulationConfig, gather_cohort, init_population,
-    scatter_cohort,
+    BankedState, PopulationConfig, gather_cohort, init_banks,
+    init_population, scatter_cohort,
 )
-from repro.train.paper_repro import accuracy, ce_loss, device_grads, init_linear
+from repro.train.paper_repro import (
+    accuracy, ce_loss, device_grads, flat_grad_fn, init_linear,
+)
 
 #: round-key salts owned by the population layer (0/1/2 belong to the MAC /
 #: encode / channel-draw consumers, matching round_simulated)
@@ -205,6 +210,13 @@ class CompiledPopulation:
         self.d = flat0.shape[0]
         self.params0 = params
         self.scheme = get_scheme(exp.cfg, self.d, pop.k_cohort)
+        self.localwork = get_local(exp.cfg, exp.local_lr)
+        if not self.localwork.identity and exp.local_steps > 1:
+            raise ValueError(
+                "local_steps > 1 (the legacy FedAvg path) conflicts with "
+                f"the configured local algorithm {exp.cfg.local!r} at "
+                f"local_epochs={exp.cfg.local_epochs}; use cfg.local_epochs")
+        self._grad_fn = flat_grad_fn(self.unravel)
         self.opt = Optimizer(name=exp.optimizer, lr=exp.lr)
         self.xt, self.yt = jnp.asarray(x_test), jnp.asarray(y_test)
         self.ctx = MACContext(
@@ -212,6 +224,17 @@ class CompiledPopulation:
             use_kernel=exp.use_kernel or exp.cfg.use_kernel)
         self.pstate0 = init_population(
             pop, self.d, exp.steps, dtype=jnp.dtype(exp.cfg.state_dtype))
+        # FedDyn duals are persistent per-device state, banked exactly like
+        # the error accumulators — a cold slot reads dual = 0, which IS the
+        # algorithm's fresh-device initialisation, so direct-mapped eviction
+        # degrades a device to "fresh", never to "wrong" (DESIGN.md §11).
+        # Kept float32 regardless of state_dtype: duals integrate alpha-
+        # scaled drift and are never renormalised by error feedback.
+        self.dual_banks0 = None
+        if self.localwork.has_dual:
+            cap = pop.capacity if pop.capacity else pop.m_total
+            self.dual_banks0 = init_banks(cap, min(pop.bank_size, cap),
+                                          self.d, jnp.float32)
         # traced per-round knobs — vmappable via with_overrides
         self.avail_rate = jnp.float32(pop.avail_rate)
         self.straggler_deadline = jnp.float32(pop.straggler_deadline)
@@ -234,16 +257,17 @@ class CompiledPopulation:
     def _carry0(self):
         carry = (self.params0, self.opt.init(self.params0),
                  self.pstate0.banks)
+        if self.localwork.has_dual:
+            carry = carry + (self.dual_banks0,)
         if self.exp.guard is not None:
             carry = carry + (guards.init_guard_state(),)
         return carry
 
-    def _round(self, sch: Scheme, carry, t, key):
-        if self.exp.guard is not None:
-            params, opt_state, banks, gstate = carry
-        else:
-            params, opt_state, banks = carry
-        old_banks = banks
+    def _round(self, sch: Scheme, lw: LocalWork, carry, t, key):
+        params, opt_state, banks = carry[:3]
+        dual_banks = carry[3] if lw.has_dual else None
+        gstate = carry[-1] if self.exp.guard is not None else None
+        old_extras = (banks,) + ((dual_banks,) if lw.has_dual else ())
         exp, pop, ps = self.exp, self.exp.pop, self.pstate0
         avail = churn.availability(ps.arrival, ps.departure, t,
                                    jax.random.fold_in(key, SALT_AVAIL),
@@ -256,10 +280,25 @@ class CompiledPopulation:
                 & (rank.astype(jnp.float32) < self.k_active)
                 & stragglers.deadline_mask(lat, self.straggler_deadline))
         xk, yk = self.data.cohort_batch(cohort)
-        grads, _ = device_grads(
-            params, self.unravel, xk, yk,
-            jnp.zeros((pop.k_cohort, self.d), jnp.float32),
-            local_steps=exp.local_steps, local_lr=exp.local_lr)
+        if lw.identity:
+            # the pre-axis jaxpr, byte-for-byte — pins the goldens
+            grads, _ = device_grads(
+                params, self.unravel, xk, yk,
+                jnp.zeros((pop.k_cohort, self.d), jnp.float32),
+                local_steps=exp.local_steps, local_lr=exp.local_lr)
+        else:
+            duals = (gather_cohort(dual_banks, cohort) if lw.has_dual
+                     else None)
+            grads, _, new_duals = local_device_grads(
+                lw, self._grad_fn, params, xk, yk,
+                jnp.zeros((pop.k_cohort, self.d), jnp.float32), duals)
+            if lw.has_dual:
+                # masked-out cohort members did not run this round: their
+                # dual must not evolve (the keep-rule round_masked applies
+                # to the error banks); the scatter re-writes the gathered
+                # value, claiming the slot with unchanged contents
+                new_duals = jnp.where(mask[:, None], new_duals, duals)
+                dual_banks = scatter_cohort(dual_banks, cohort, new_duals)
         ghat, banks, met = population_round(
             sch, banks, cohort, mask.astype(jnp.float32), grads, t, key,
             self.ctx, pop.m_total, gains=ps.gains[cohort],
@@ -267,21 +306,22 @@ class CompiledPopulation:
             site_noise_scale=self.site_noise_scale,
             backhaul_sigma2=self.backhaul_sigma2,
             site_trim_frac=pop.site_trim_frac)
+        extras = (banks,) + ((dual_banks,) if lw.has_dual else ())
         if exp.guard is not None:
-            params, opt_state, (banks,), gstate, loss, gmet = (
+            params, opt_state, extras, gstate, loss, gmet = (
                 guards.guarded_step(
                     exp.guard, gstate, self.opt, params, opt_state, ghat,
-                    self.unravel, extras=(banks,), old_extras=(old_banks,),
+                    self.unravel, extras=extras, old_extras=old_extras,
                     loss_fn=lambda p: ce_loss(p, self.xt, self.yt)))
             out = {"acc": accuracy(params, self.xt, self.yt),
                    "loss": loss, "metrics": {**met, **gmet}}
-            return (params, opt_state, banks, gstate), out
+            return (params, opt_state) + tuple(extras) + (gstate,), out
         params, opt_state = self.opt.apply(params, self.unravel(ghat),
                                            opt_state)
         out = {"acc": accuracy(params, self.xt, self.yt),
                "loss": ce_loss(params, self.xt, self.yt),
                "metrics": met}
-        return (params, opt_state, banks), out
+        return (params, opt_state) + extras, out
 
     # ------------------------------------------------------- traced entry
     def run_segment(self, overrides: Dict[str, jnp.ndarray],
@@ -299,15 +339,20 @@ class CompiledPopulation:
             raise ValueError("population runs draw their own masks")
         pop_ov = {k: v for k, v in overrides.items()
                   if k in POP_OVERRIDE_ATTRS}
+        lw_ov = {k: v for k, v in overrides.items()
+                 if k in LOCAL_OVERRIDE_ATTRS}
         sch_ov = {k: v for k, v in overrides.items()
-                  if k not in POP_OVERRIDE_ATTRS}
+                  if k not in POP_OVERRIDE_ATTRS
+                  and k not in LOCAL_OVERRIDE_ATTRS}
         runner = self.with_overrides(**pop_ov) if pop_ov else self
         sch = (self.scheme.with_overrides(**sch_ov) if sch_ov
                else self.scheme)
+        lw = (self.localwork.with_overrides(**lw_ov) if lw_ov
+              else self.localwork)
 
         def body(carry, inp):
             t, key = inp
-            return runner._round(sch, carry, t, key)
+            return runner._round(sch, lw, carry, t, key)
 
         ts = t0 + jnp.arange(keys.shape[0])
         return jax.lax.scan(body, carry, (ts, keys))

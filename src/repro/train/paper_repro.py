@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import OTAConfig
 from repro.core.schemes import get_scheme, round_simulated
+from repro.local.work import get_local, local_device_grads
 from repro.optim.optim import Optimizer
 
 
@@ -55,6 +56,18 @@ def flat_grad(params, xm, ym):
     """One device's flattened gradient on its local batch."""
     g = jax.grad(ce_loss)(params, xm, ym)
     return jax.flatten_util.ravel_pytree(g)[0]
+
+
+def flat_grad_fn(unravel):
+    """``(w_flat, xm, ym) -> (d,)`` flat-gradient closure — the per-epoch
+    hook :func:`repro.local.work.local_device_grads` drives (injected so
+    ``repro.local`` stays model-agnostic)."""
+
+    def gf(wflat, xm, ym):
+        g = jax.grad(ce_loss)(unravel(wflat), xm, ym)
+        return jax.flatten_util.ravel_pytree(g)[0]
+
+    return gf
 
 
 def flat_local_delta(params, unravel, xm, ym, local_steps: int,
@@ -101,6 +114,10 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
                                (the innovation) through the same channel.
       momentum_correction>0  — DGC-style [3]: devices compress the momentum
                                u = beta*u + g instead of the raw gradient.
+      ota.local != "sgd" or ota.local_epochs > 1 — the registered
+                               local-compute axis (repro.local): FedAvg-E /
+                               FedProx / FedDyn inner loops, sharing the
+                               delta convention above.
     """
     m, b, dim = x_dev.shape
     n_classes = int(y_dev.max()) + 1
@@ -109,26 +126,39 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
     flat0, unravel = jax.flatten_util.ravel_pytree(params)
     d = flat0.shape[0]
     scheme = get_scheme(ota, d, m)
+    lw = get_local(ota, local_lr)
+    if not lw.identity and local_steps > 1:
+        raise ValueError(
+            "local_steps > 1 (the legacy FedAvg path) conflicts with the "
+            f"configured local algorithm {ota.local!r} at "
+            f"local_epochs={ota.local_epochs}; use ota.local_epochs")
+    gf = flat_grad_fn(unravel)
     opt = Optimizer(name=optimizer, lr=lr)
     opt_state = opt.init(params)
     deltas = jnp.zeros((m, d), jnp.float32)
     momenta = jnp.zeros((m, d), jnp.float32)
+    duals = lw.init_dual(m, d)
     xd, yd = jnp.asarray(x_dev), jnp.asarray(y_dev)
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
 
     @jax.jit
-    def step_fn(params, opt_state, deltas, momenta, t, kk):
-        grads, momenta_n = device_grads(
-            params, unravel, xd, yd, momenta, local_steps=local_steps,
-            local_lr=local_lr, momentum_correction=momentum_correction)
+    def step_fn(params, opt_state, deltas, momenta, duals, t, kk):
+        if lw.identity:
+            grads, momenta_n = device_grads(
+                params, unravel, xd, yd, momenta, local_steps=local_steps,
+                local_lr=local_lr, momentum_correction=momentum_correction)
+        else:
+            grads, momenta_n, duals = local_device_grads(
+                lw, gf, params, xd, yd, momenta, duals,
+                momentum_correction=momentum_correction)
         ghat, deltas, met = round_simulated(scheme, grads, deltas, t, kk)
         params, opt_state = opt.apply(params, unravel(ghat), opt_state)
-        return params, opt_state, deltas, momenta_n, met
+        return params, opt_state, deltas, momenta_n, duals, met
 
     run = FederatedRun()
     for t in range(steps):
-        params, opt_state, deltas, momenta, met = step_fn(
-            params, opt_state, deltas, momenta, t,
+        params, opt_state, deltas, momenta, duals, met = step_fn(
+            params, opt_state, deltas, momenta, duals, t,
             jax.random.PRNGKey(1000 + t))
         if t % eval_every == 0 or t == steps - 1:
             acc = float(accuracy(params, xt, yt))

@@ -1,4 +1,6 @@
 """The fixed-seed scheme configurations pinned by the parity goldens."""
+import dataclasses
+
 from repro.configs.base import OTAConfig
 
 PARITY_CASES = {
@@ -42,4 +44,20 @@ PARITY_CASES = {
     "signsgd": OTAConfig(scheme="signsgd", s_frac=0.5, p_avg=500.0,
                          total_steps=10),
     "qsgd": OTAConfig(scheme="qsgd", s_frac=0.5, p_avg=500.0, total_steps=10),
+}
+
+
+def local_identity(cfg: OTAConfig) -> OTAConfig:
+    """``cfg`` with the local-compute axis pinned explicitly at its
+    identity point (``local=sgd, local_epochs=1`` — the paper's
+    one-SGD-step device, repro.local)."""
+    return dataclasses.replace(cfg, local="sgd", local_epochs=1,
+                               prox_mu=0.0, dyn_alpha=0.0)
+
+
+#: every golden case with the local axis pinned at identity — resolved
+#: against the SAME golden arrays, so make_golden regenerates nothing:
+#: tests/test_local.py asserts each is byte-identical to its base golden
+LOCAL_IDENTITY_CASES = {
+    name: local_identity(cfg) for name, cfg in PARITY_CASES.items()
 }

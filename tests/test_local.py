@@ -1,0 +1,406 @@
+"""Local-compute axis (repro.local): parity pins, algorithms, faults, sweeps.
+
+Acceptance bars (docs/DESIGN.md §11):
+
+* **identity is bitwise** — ``local=sgd, local_epochs=1`` (the default)
+  reproduces every committed golden byte-for-byte, at the round level and
+  through full dense/population engine runs, analog and digital;
+* **one trace fits all** — the multi-epoch scan at a traced E below the
+  static bound equals the exact-length loop bitwise (what lets whole
+  (E, mu, alpha) grids ride one vmapped program), and the compiled engines
+  match the looped reference for every algorithm;
+* **duals are honest state** — FedDyn's per-device dual lives in the scan
+  carry (dense) / a ``BankedState`` (population), never sees the MAC, and
+  keeps its semantics under stale/dropout/Byzantine fault injection.
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OTAConfig
+from repro.core.schemes import MACContext, get_scheme, round_simulated
+from repro.data.synthetic import federated_split, make_classification
+from repro.experiments import run_compiled, run_sweep
+from repro.experiments.engine import (
+    CompiledExperiment, Experiment, round_keys,
+)
+from repro.experiments.sweep import LOCAL_VMAP_AXES
+from repro.local import (
+    LOCAL_REGISTRY, LocalWork, get_local, local_device_grads,
+)
+from repro.population import (
+    PopulationConfig, PopulationData, gather_cohort, init_banks,
+    population_round, run_population,
+)
+from repro.population.engine import CompiledPopulation, PopulationExperiment
+from repro.train.paper_repro import (
+    device_grads, flat_grad_fn, init_linear, run_federated,
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tests.golden.parity_cases import (  # noqa: E402
+    LOCAL_IDENTITY_CASES, PARITY_CASES, local_identity,
+)
+
+GOLDEN = np.load(os.path.join(os.path.dirname(__file__), "golden",
+                              "simulated_parity.npz"))
+STEPS, M, B = 6, 4, 64
+
+
+@pytest.fixture(scope="module")
+def data():
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=800, n_test=300, dim=48, noise=2.0, seed=3)
+    xd, yd = federated_split(xtr, ytr, m=M, b=B, iid=True, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+def _adsgd(**kw):
+    base = dict(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                total_steps=STEPS, projection="dense", amp_iters=6,
+                mean_removal_steps=2)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+def _final_carry(data, cfg, steps=STEPS, **exp_kw):
+    """Run the dense engine and return the raw final scan carry."""
+    (xd, yd), (xte, yte) = data
+    exp = Experiment(cfg=cfg, steps=steps, eval_every=2, **exp_kw)
+    ce = CompiledExperiment(xd, yd, xte, yte, exp)
+    keys = round_keys(steps)
+    carry, _ = jax.jit(
+        lambda c, k: ce.run_segment({}, k, None, c, 0))(ce._carry0(), keys)
+    return ce, carry
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_four_algorithms():
+    assert set(LOCAL_REGISTRY) == {"sgd", "fedavg", "fedprox", "feddyn"}
+    for name in LOCAL_REGISTRY:
+        lw = get_local(OTAConfig(local=name))
+        assert lw.name == name
+        assert isinstance(lw, LocalWork)
+
+
+def test_unknown_local_algorithm_raises():
+    with pytest.raises(KeyError, match="unknown local algorithm"):
+        get_local(OTAConfig(local="gossip"))
+
+
+def test_identity_gate_is_sgd_e1_only():
+    assert get_local(OTAConfig()).identity
+    assert not get_local(OTAConfig(local_epochs=2)).identity
+    for name in ("fedavg", "fedprox", "feddyn"):
+        assert not get_local(OTAConfig(local=name)).identity
+
+
+def test_with_overrides_rejects_unknown_attrs():
+    lw = get_local(OTAConfig(local="feddyn"))
+    with pytest.raises(AttributeError, match="unknown local override"):
+        lw.with_overrides(byz_scale=jnp.float32(1.0))
+
+
+def test_legacy_local_steps_conflicts_with_local_axis(data):
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(local="fedavg", local_epochs=2)
+    with pytest.raises(ValueError, match="local_steps"):
+        run_compiled(xd, yd, xte, yte, cfg, STEPS, local_steps=3)
+    with pytest.raises(ValueError, match="local_steps"):
+        run_federated(xd, yd, xte, yte, cfg, STEPS, local_steps=3)
+
+
+# ---------------------------------------------------------------------------
+# golden parity: the identity point is bitwise the committed goldens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", sorted(LOCAL_IDENTITY_CASES))
+def test_local_pinned_round_matches_golden(case):
+    """Explicitly pinning local=sgd/E=1 changes no scheme numerics: every
+    committed golden is reproduced byte-for-byte (make_golden untouched)."""
+    cfg = LOCAL_IDENTITY_CASES[case]
+    grads = jnp.asarray(GOLDEN["grads"])
+    m, d = grads.shape
+    scheme = get_scheme(cfg, d, m)
+    ghat, nd, _ = round_simulated(scheme, grads, jnp.zeros((m, d)), 0,
+                                  jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(ghat), GOLDEN[f"{case}__ghat"])
+    np.testing.assert_array_equal(np.asarray(nd), GOLDEN[f"{case}__deltas"])
+
+
+def test_local_pinned_population_round_matches_golden():
+    """The banked population round under the pinned config reproduces the
+    population_full golden byte-for-byte."""
+    cfg = local_identity(PARITY_CASES["a_dsgd_dense"])
+    grads = jnp.asarray(GOLDEN["grads"])
+    m, d = grads.shape
+    scheme = get_scheme(cfg, d, m)
+    ctx = MACContext(m=m, fading=cfg.fading, csi=scheme.csi)
+    cohort = jnp.arange(m, dtype=jnp.int32)
+    ghat, banks, _ = population_round(
+        scheme, init_banks(m, 4, d), cohort, jnp.ones((m,), jnp.float32),
+        grads, 0, jax.random.PRNGKey(11), ctx, m)
+    np.testing.assert_array_equal(np.asarray(ghat),
+                                  GOLDEN["population_full__ghat"])
+    np.testing.assert_array_equal(np.asarray(gather_cohort(banks, cohort)),
+                                  GOLDEN["population_full__deltas"])
+
+
+@pytest.mark.parametrize("scheme", ["a_dsgd", "d_dsgd"])
+def test_run_compiled_identity_pin_bitwise(data, scheme):
+    """Full dense runs: default config == explicitly pinned local axis,
+    bitwise, analog and digital."""
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(scheme=scheme)
+    r0 = run_compiled(xd, yd, xte, yte, base, STEPS, eval_every=2)
+    r1 = run_compiled(xd, yd, xte, yte, local_identity(base), STEPS,
+                      eval_every=2)
+    np.testing.assert_array_equal(r0.all_accs, r1.all_accs)
+    np.testing.assert_array_equal(r0.all_losses, r1.all_losses)
+
+
+@pytest.mark.parametrize("scheme", ["a_dsgd", "d_dsgd"])
+def test_run_population_identity_pin_bitwise(data, scheme):
+    """Full population runs: default == pinned local axis, bitwise."""
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(scheme=scheme)
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M)
+    r0 = run_population(pdata, xte, yte, base, pop, STEPS, eval_every=2)
+    r1 = run_population(pdata, xte, yte, local_identity(base), pop, STEPS,
+                        eval_every=2)
+    np.testing.assert_array_equal(r0.all_accs, r1.all_accs)
+    np.testing.assert_array_equal(r0.all_losses, r1.all_losses)
+
+
+def test_scan_path_at_e1_matches_device_grads_bitwise(data):
+    """The masked-epoch scan, compiled for max_epochs=2 but traced at E=1,
+    produces the legacy single gradient bit-for-bit — the property that
+    makes a swept local_epochs grid bitwise per-point."""
+    (xd, yd), _ = data
+    xd, yd = jnp.asarray(xd), jnp.asarray(yd)
+    params = init_linear(xd.shape[-1], int(np.max(yd)) + 1,
+                         jax.random.PRNGKey(0))
+    _, unravel = jax.flatten_util.ravel_pytree(params)
+    lw = get_local(OTAConfig(local="sgd", local_epochs=2))
+    assert not lw.identity and lw.max_epochs == 2
+    lw = lw.with_overrides(local_epochs=jnp.float32(1.0))
+    d = jax.flatten_util.ravel_pytree(params)[0].shape[0]
+    zeros = jnp.zeros((M, d), jnp.float32)
+    got, _, _ = local_device_grads(lw, flat_grad_fn(unravel), params,
+                                   xd, yd, zeros)
+    want, _ = device_grads(params, unravel, xd, yd, zeros)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# algorithms: compiled == looped, and every scheme composes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo,kw", [
+    ("sgd", {}), ("fedavg", {}),
+    ("fedprox", {"prox_mu": 0.3}), ("feddyn", {"dyn_alpha": 0.2}),
+])
+def test_compiled_matches_looped_reference(data, algo, kw):
+    """run_compiled == run_federated entry-for-entry with local work on
+    (the engines share local_device_grads, like device_grads before)."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(local=algo, local_epochs=3, **kw)
+    rc = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    rl = run_federated(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    np.testing.assert_array_equal(np.asarray(rc.accs), np.asarray(rl.accs))
+    np.testing.assert_array_equal(np.asarray(rc.losses),
+                                  np.asarray(rl.losses))
+
+
+@pytest.mark.parametrize("scheme", ["ideal", "d_dsgd", "signsgd", "qsgd"])
+def test_every_mac_scheme_composes_with_feddyn(data, scheme):
+    """The scheme encode/decode contract is untouched: the dual-carrying
+    algorithm runs through analog, digital, and baseline transports."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(scheme=scheme, local="feddyn", local_epochs=2,
+                 dyn_alpha=0.1)
+    r = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    assert np.all(np.isfinite(r.all_losses))
+
+
+def test_feddyn_dual_evolves_in_dense_carry(data):
+    """The dense carry gains a (M, d) dual element that actually moves."""
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.3)
+    ce, carry = _final_carry(data, cfg)
+    assert ce.localwork.has_dual
+    duals = np.asarray(carry[4])
+    assert duals.shape == (M, ce.d)
+    assert np.all(np.isfinite(duals)) and np.any(duals != 0.0)
+
+
+def test_population_feddyn_full_cohort_matches_dense(data):
+    """K == M population FedDyn == dense FedDyn bitwise: banked duals and
+    the scan-carried duals are the same state under the same RNG layout."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.3)
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M)
+    rp = run_population(pdata, xte, yte, cfg, pop, STEPS, eval_every=2)
+    rd = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    np.testing.assert_array_equal(rp.all_losses, rd.all_losses)
+    np.testing.assert_array_equal(rp.all_accs, rd.all_accs)
+
+
+def test_population_feddyn_banks_duals_with_eviction():
+    """capacity < M: dual slots evict direct-mapped; a cold read is dual=0
+    — FedDyn's fresh-device init — so the run stays finite and banked."""
+    from repro.data.partition import population_partition
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=1200, n_test=300, dim=16, n_classes=4, noise=2.0, seed=0)
+    m_total, k, cap = 64, 8, 16
+    part = population_partition(ytr, m=m_total, b=16, kind="iid", seed=0)
+    pdata = PopulationData.from_pool(xtr, ytr, part)
+    pop = PopulationConfig(m_total=m_total, k_cohort=k, capacity=cap,
+                           bank_size=8)
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.2)
+    exp = PopulationExperiment(cfg=cfg, pop=pop, steps=STEPS, eval_every=2)
+    cp = CompiledPopulation(pdata, xte, yte, exp)
+    assert cp.dual_banks0 is not None
+    assert cp.dual_banks0.deltas.shape == (cap // 8, 8, cp.d)
+    keys = round_keys(STEPS)
+    carry, outs = jax.jit(
+        lambda c, k: cp.run_segment({}, k, None, c, 0))(cp._carry0(), keys)
+    dual_banks = carry[3]
+    assert np.all(np.isfinite(np.asarray(dual_banks.deltas)))
+    assert np.any(np.asarray(dual_banks.owner) >= 0)
+    assert np.all(np.isfinite(np.asarray(outs["loss"])))
+
+
+# ---------------------------------------------------------------------------
+# fault interaction: duals never see the MAC
+# ---------------------------------------------------------------------------
+
+
+def test_zero_rate_robust_noop_with_local_work(data):
+    """robust=True + zero rates is still a bitwise no-op with multi-epoch
+    FedDyn enabled (the fault path transforms transmitted deltas only)."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.2)
+    r0 = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    r1 = run_compiled(xd, yd, xte, yte,
+                      dataclasses.replace(cfg, robust=True), STEPS,
+                      eval_every=2)
+    np.testing.assert_array_equal(r0.all_losses, r1.all_losses)
+    np.testing.assert_array_equal(r0.all_accs, r1.all_accs)
+
+
+@pytest.mark.parametrize("fault_kw", [
+    {"fault_rate": 0.5, "fault_kind": "stale"},
+    {"fault_rate": 0.5, "fault_kind": "dropout"},
+    {"byzantine_frac": 0.25},
+])
+def test_feddyn_first_round_duals_ignore_faults(data, fault_kw):
+    """Faults transform the *transmitted* frame/gradient after local
+    compute, so the round-1 dual update is identical with faults on
+    (after round 1 the global model diverges, so compare one round)."""
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.3)
+    _, clean = _final_carry(data, cfg, steps=1)
+    _, faulted = _final_carry(
+        data, dataclasses.replace(cfg, robust=True, **fault_kw), steps=1)
+    np.testing.assert_array_equal(np.asarray(clean[4]),
+                                  np.asarray(faulted[4]))
+
+
+def test_feddyn_duals_stay_finite_under_sustained_faults(data):
+    """Stale + Byzantine at high rates for the whole run: the banked dual
+    state never sees a non-finite value (no NaN leak into duals)."""
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.3,
+                 robust=True, byzantine_frac=0.25, byz_scale=20.0,
+                 fault_rate=0.4, fault_kind="stale")
+    _, carry = _final_carry(data, cfg)
+    duals = np.asarray(carry[4])
+    assert np.all(np.isfinite(duals))
+
+
+def test_checkpoint_resume_feddyn_bitwise(data, tmp_path):
+    """The dual rides the checkpointed carry: interrupt + resume == the
+    uninterrupted run, bitwise."""
+    (xd, yd), (xte, yte) = data
+    cfg = _adsgd(local="feddyn", local_epochs=2, dyn_alpha=0.2)
+    full = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+    ck = dict(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    assert run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2,
+                        stop_after_step=2, **ck) is None
+    resumed = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2,
+                           resume=True, **ck)
+    np.testing.assert_array_equal(full.all_losses, resumed.all_losses)
+    np.testing.assert_array_equal(full.all_accs, resumed.all_accs)
+
+
+# ---------------------------------------------------------------------------
+# sweeps: the new vmapped axes
+# ---------------------------------------------------------------------------
+
+
+def test_local_axes_are_registered_vmapped():
+    assert LOCAL_VMAP_AXES == ("local_epochs", "prox_mu", "dyn_alpha")
+
+
+@pytest.mark.slow
+def test_sweep_local_axes_vmapped_match_looped(data):
+    """A (local_epochs, prox_mu) grid on one vmapped program matches
+    per-point compiled runs (accs exactly, per the sweep convention —
+    losses to float32 ulp, as vmapping may reassociate reductions),
+    including the E=1 point, which equals the legacy identity run."""
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(local="fedprox")
+    res = run_sweep((xd, yd), (xte, yte), base,
+                    {"local_epochs": [1, 3], "prox_mu": [0.0, 0.4]},
+                    steps=STEPS, eval_every=2)
+    assert len(res.records) == 4
+    for rec in res.records:
+        cfg = dataclasses.replace(base,
+                                  local_epochs=int(rec["local_epochs"]),
+                                  prox_mu=rec["prox_mu"])
+        r = run_compiled(xd, yd, xte, yte, cfg, STEPS, eval_every=2)
+        assert rec["accs"] == r.accs
+        np.testing.assert_allclose(np.asarray(rec["losses"]),
+                                   np.asarray(r.losses), rtol=2e-6)
+
+
+@pytest.mark.slow
+def test_population_sweep_dyn_alpha_vmapped_match_looped(data):
+    """dyn_alpha rides the population sweep's vmapped override path."""
+    from repro.experiments import run_population_sweep
+    (xd, yd), (xte, yte) = data
+    base = _adsgd(local="feddyn", local_epochs=2)
+    pdata = PopulationData.from_dense(xd, yd)
+    pop = PopulationConfig(m_total=M, k_cohort=M)
+    res = run_population_sweep(pdata, (xte, yte), base, pop,
+                               {"dyn_alpha": [0.0, 0.3]}, steps=STEPS,
+                               eval_every=2)
+    for rec in res.records:
+        cfg = dataclasses.replace(base, dyn_alpha=rec["dyn_alpha"])
+        r = run_population(pdata, xte, yte, cfg, pop, STEPS, eval_every=2)
+        assert rec["accs"] == r.accs
+        np.testing.assert_allclose(np.asarray(rec["losses"]),
+                                   np.asarray(r.losses), rtol=2e-6)
+
+
+def test_sweep_static_local_axis_groups_by_algorithm(data):
+    """``local`` itself is a static axis: one compile per algorithm, all
+    sharing the vmapped epoch grid."""
+    (xd, yd), (xte, yte) = data
+    res = run_sweep((xd, yd), (xte, yte), _adsgd(),
+                    {"local": ["fedavg", "fedprox"],
+                     "local_epochs": [2]}, steps=STEPS, eval_every=2)
+    assert len(res.records) == 2
+    assert {r["local"] for r in res.records} == {"fedavg", "fedprox"}

@@ -314,6 +314,7 @@ def test_unknown_population_override_raises(data):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_population_scale_1e5_runs_with_banked_memory():
     """M = 10^5 devices, K = 16 cohort, capacity 2048: the run executes as
     one scan and the persistent d-sized state is ~capacity-sized, nearly
