@@ -20,7 +20,8 @@ def main() -> None:
                             fig2_schemes, fig3_power_alloc, fig4_power_sweep,
                             fig5_bandwidth, fig6_devices, fig7_s_tradeoff,
                             fig8_bias, fig9_fading, fig10_scaling,
-                            fig11_robust, fig12_local, roofline)
+                            fig11_robust, fig12_local, fig13_geometry,
+                            roofline)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "fig2": fig2_schemes.main,
@@ -34,6 +35,7 @@ def main() -> None:
         "fig10": fig10_scaling.main,
         "fig11": fig11_robust.main,
         "fig12": fig12_local.main,
+        "fig13": fig13_geometry.main,
         "thm1": convergence_bound.main,
         "roofline": roofline.main,
         "kernels": bench_kernels.main,

@@ -217,6 +217,28 @@ class OTAConfig:
     norm_cap: float = 1.0          # per-frame L2 cap, norm_cap agg (traced)
     clip_power: bool = False       # static: analog transmit-side power cap
     power_cap: float = 1.5         # cap as a multiple of P_t (traced)
+    # geometry axis (repro.core.geometry): placement-derived large-scale
+    # gains composed onto the small-scale fading draw.  ``geometry`` is the
+    # static gate (``"none"`` keeps every pre-geometry golden byte-identical
+    # — no geometry op enters the trace); cell_radius / path_loss_exp enter
+    # the round as one traced scalar each (SCALAR_VMAP_AXES), the remaining
+    # fields are structural GeometrySpec bits (docs/DESIGN.md §12).
+    geometry: str = "none"         # none | disk (static placement model)
+    cell_radius: float = 1000.0    # cell radius R in meters (traced)
+    path_loss_exp: float = 3.0     # path-loss exponent gamma (traced)
+    carrier_freq: float = 915e6    # f_c in Hz (static; link-budget diagnostics)
+    bs_gain_db: float = 5.0        # BS antenna gain in dBi (static)
+    user_gain_db: float = 0.0      # device antenna gain in dBi (static)
+    bs_height: float = 10.0        # BS mast height in meters (static)
+    geo_ref_dist: float = 100.0    # d0: gain = antenna gains alone (static)
+    # subband scheduling axis (repro.core.scheduling): which devices
+    # transmit each round.  ``scheduler`` selects the registered policy
+    # (static program structure; "none" compiles no scheduling op);
+    # ``n_subbands`` enters as a traced rank cutoff (SCALAR_VMAP_AXES);
+    # ``pf_horizon`` shapes the prop_fair averaging and stays static.
+    scheduler: str = "none"        # none | round_robin | gain_ranked | prop_fair
+    n_subbands: int = 4            # S transmit slots per round (traced)
+    pf_horizon: float = 10.0       # prop_fair average-rate horizon (static)
     # local-compute axis (repro.local): what devices do between uplinks.
     # ``local`` selects the registered algorithm (static program structure);
     # ``local_epochs`` / ``prox_mu`` / ``dyn_alpha`` enter the round as one

@@ -23,6 +23,7 @@ PS-side normalisation (eq. 25 / eq. 18):
 
     y_body = (y[:s_tilde] + y[s_tilde] * 1) / y[s_tilde + 1]
 """
+
 from __future__ import annotations
 
 from typing import Tuple
@@ -31,7 +32,9 @@ import jax
 import jax.numpy as jnp
 
 
-def make_frame(g_tilde: jnp.ndarray, p_t, use_mean_removal) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def make_frame(
+    g_tilde: jnp.ndarray, p_t, use_mean_removal
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Build the per-device channel frame. Returns (frame, alpha).
 
     use_mean_removal: traced bool/0-1 scalar.
@@ -42,8 +45,7 @@ def make_frame(g_tilde: jnp.ndarray, p_t, use_mean_removal) -> Tuple[jnp.ndarray
     energy = jnp.sum(g_tilde * g_tilde) - (s_tilde - 1) * mu * mu + 1.0
     alpha = jnp.asarray(p_t, g_tilde.dtype) / jnp.maximum(energy, 1e-12)
     ra = jnp.sqrt(alpha)
-    frame = jnp.concatenate([ra * (g_tilde - mu),
-                             jnp.stack([ra * mu, ra])])
+    frame = jnp.concatenate([ra * (g_tilde - mu), jnp.stack([ra * mu, ra])])
     return frame, alpha
 
 
@@ -62,8 +64,14 @@ def mac_sum(frames: jnp.ndarray, key: jnp.ndarray, sigma2: float) -> jnp.ndarray
     return y + awgn(key, y.shape, sigma2, y.dtype)
 
 
-def site_awgn(key: jnp.ndarray, shape, sigma2, n_sites: int,
-              site_noise_scale=1.0, dtype=jnp.float32) -> jnp.ndarray:
+def site_awgn(
+    key: jnp.ndarray,
+    shape,
+    sigma2,
+    n_sites: int,
+    site_noise_scale=1.0,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
     """Summed receiver noise of a hierarchical MAC (n_sites edge sites).
 
     Each site observes its own OTA partial sum plus AWGN of variance
@@ -73,9 +81,8 @@ def site_awgn(key: jnp.ndarray, shape, sigma2, n_sites: int,
     hierarchy (repro.population.hierarchy).  Both scalars may be traced.
     """
     sig = jnp.asarray(sigma2, dtype) * jnp.asarray(site_noise_scale, dtype)
-    z = jax.vmap(
-        lambda j: awgn(jax.random.fold_in(key, j), shape, sig, dtype)
-    )(jnp.arange(n_sites))
+    sites = jnp.arange(n_sites)
+    z = jax.vmap(lambda j: awgn(jax.random.fold_in(key, j), shape, sig, dtype))(sites)
     return jnp.sum(z, axis=0)
 
 

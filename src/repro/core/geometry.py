@@ -1,0 +1,175 @@
+"""Geometry-grounded channel model: placement-derived large-scale gains.
+
+The fading axis (:mod:`repro.core.fading`, docs/DESIGN.md §8) is purely
+statistical — Rayleigh draws with no notion of *where* devices are.  The
+deployable version of the paper's MAC derives per-device SNR from placement:
+cell radius, carrier frequency, path-loss exponent, BS/user antenna gains
+(the channel setup of LConann's ``fl_main.py``, SNIPPETS.md §1).  This
+module adds that layer as a *large-scale* gain composed multiplicatively
+onto the small-scale fading draw (docs/DESIGN.md §12):
+
+    p_factor_m  =  small_scale_m  *  g_m,
+    g_m         =  G_bs * G_user * (d_m / d0) ** (-gamma),
+
+where ``d_m`` is device m's distance to the BS (devices drawn uniformly on
+a disk of radius ``cell_radius`` around a BS mast of height ``bs_height``)
+and ``d0`` is the reference distance at which the normalised gain equals
+the antenna gains alone.  The *normalised* power-law (rather than the
+absolute Friis budget, which at 915 MHz and city-scale distances is ~1e-10
+and would drown any trainable signal in fixed-σ² AWGN) keeps ``g_m`` in a
+regime where sweeping ``cell_radius`` traces out the accuracy-vs-coverage
+trade-off; :func:`link_budget_db` exposes the absolute dB budget for
+diagnostics and radio-planning sanity checks.
+
+Everything follows the :mod:`repro.core.fading` conventions:
+
+* device positions are drawn *once per run* from the run-level
+  :func:`geometry_base_key` — large-scale geometry is a property of the
+  deployment, not of the per-round key stream, so a ``seed`` sweep axis
+  holds placements fixed (common random numbers for paired comparisons);
+* ``cell_radius`` and ``path_loss_exp`` enter as traced multiplies
+  (``exp(-gamma * log(d/d0))``), so both are vmappable sweep axes
+  (``SCALAR_VMAP_AXES`` in :mod:`repro.experiments.sweep`);
+* the structural bits (``geometry`` kind, antenna gains, BS height,
+  carrier frequency, reference distance) live on a frozen
+  :class:`GeometrySpec` — static, one compiled program per combination.
+
+With ``geometry="none"`` (the default) no op from this module enters any
+traced program, so every pre-geometry golden stays byte-identical (the
+static-gating contract shared with :mod:`repro.robust`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: recognised geometry kinds (validated by spec_from_cfg)
+GEOMETRIES = ("none", "disk")
+
+#: salt decorrelating the run-level placement stream from every other
+#: consumer of OTAConfig.seed (fading streams, fault traces, projectors)
+GEOMETRY_SEED_SALT = 0x6E00
+
+#: speed of light, for the absolute (Friis) link budget
+SPEED_OF_LIGHT = 299_792_458.0
+
+
+@dataclass(frozen=True)
+class GeometrySpec:
+    """Static description of the cell geometry (trace-defining bits).
+
+    The *values* of ``cell_radius`` / ``path_loss_exp`` live on the scheme
+    object as traced scalars (swappable per grid point via
+    ``Scheme.with_overrides``); this spec pins what stays constant across a
+    sweep grid: the placement model, the antenna gains, the BS mast height,
+    the carrier (diagnostics only — see :func:`link_budget_db`), and the
+    normalisation distance ``ref_dist``.
+    """
+
+    kind: str = "disk"  # disk (uniform over the cell disk)
+    carrier_freq: float = 915e6  # f_c in Hz (the LConann setup's 915 MHz)
+    bs_gain_db: float = 5.0  # BS antenna gain (dBi)
+    user_gain_db: float = 0.0  # device antenna gain (dBi)
+    bs_height: float = 10.0  # BS mast height (m)
+    ref_dist: float = 100.0  # d0: gain = antenna gains alone at d0 (m)
+
+
+def spec_from_cfg(cfg) -> GeometrySpec:
+    """Build the spec from an OTAConfig, validating the kind."""
+    if cfg.geometry not in GEOMETRIES:
+        raise ValueError(
+            f"unknown geometry {cfg.geometry!r}; known: {GEOMETRIES}"
+        )
+    return GeometrySpec(
+        kind=cfg.geometry if cfg.geometry != "none" else "disk",
+        carrier_freq=cfg.carrier_freq,
+        bs_gain_db=cfg.bs_gain_db,
+        user_gain_db=cfg.user_gain_db,
+        bs_height=cfg.bs_height,
+        ref_dist=cfg.geo_ref_dist,
+    )
+
+
+def geometry_base_key(seed: int) -> jnp.ndarray:
+    """Run-level key anchoring the device placement.
+
+    Derived from ``OTAConfig.seed`` like :func:`fading.fading_base_key` —
+    the deployment is a property of the run configuration, so a ``seed``
+    sweep axis (which shifts the round keys) compares schedulers and power
+    budgets over the *same* placement.
+    """
+    return jax.random.PRNGKey(seed ^ GEOMETRY_SEED_SALT)
+
+
+def unit_positions(key: jnp.ndarray, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(r, theta) of m devices uniform on the unit disk.
+
+    ``r = sqrt(U)`` gives the area-uniform radial law; scaling by a traced
+    ``cell_radius`` outside this function keeps the radius a data-like
+    sweep axis (the draw itself is radius-independent).
+    """
+    u, v = jax.random.uniform(key, (2, m))
+    return jnp.sqrt(u), 2.0 * jnp.pi * v
+
+
+def device_distances(key: jnp.ndarray, m: int, cell_radius, spec: GeometrySpec):
+    """(m,) 3-D device→BS distances for a disk cell of traced radius.
+
+    The BS sits at height ``spec.bs_height`` over the cell centre, so the
+    distance floors at the mast height — no device is ever at d = 0, and
+    the power law below needs no singularity guard for physical configs.
+    """
+    r_unit, _theta = unit_positions(key, m)
+    horiz = jnp.asarray(cell_radius, jnp.float32) * r_unit
+    return jnp.sqrt(horiz * horiz + jnp.float32(spec.bs_height) ** 2)
+
+
+def large_scale_gains(
+    key: jnp.ndarray, m: int, cell_radius, path_loss_exp, spec: GeometrySpec
+) -> jnp.ndarray:
+    """(m,) normalised large-scale power gains ``g_m`` (pure in the key).
+
+    ``g_m = G_ant * (d_m / d0) ** (-gamma)`` with ``G_ant`` the combined
+    antenna gains (linear) and ``gamma`` the traced path-loss exponent —
+    realised as ``exp(-gamma * log(d/d0))`` so the exponent is a traced
+    multiply and rides a vmapped sweep axis.  ``d0 = spec.ref_dist``
+    normalises: a device at the reference distance sees the antenna gains
+    alone, devices inside it see a (bounded) boost, devices outside lose
+    power polynomially — which is what makes accuracy monotone in
+    ``cell_radius`` (benchmarks/fig13_geometry.py gates this).
+    """
+    d = device_distances(key, m, cell_radius, spec)
+    g_ant = jnp.float32(10.0 ** ((spec.bs_gain_db + spec.user_gain_db) / 10.0))
+    ratio = jnp.maximum(d / jnp.float32(spec.ref_dist), 1e-6)
+    gamma = jnp.asarray(path_loss_exp, jnp.float32)
+    return g_ant * jnp.exp(-gamma * jnp.log(ratio))
+
+
+def fspl_db(dist_m, carrier_freq) -> jnp.ndarray:
+    """Free-space path loss in dB: ``20 log10(4 pi d f / c)`` (Friis)."""
+    d = jnp.maximum(jnp.asarray(dist_m, jnp.float32), 1e-3)
+    f = jnp.float32(carrier_freq)
+    return 20.0 * jnp.log10(4.0 * jnp.pi * d * f / SPEED_OF_LIGHT)
+
+
+def link_budget_db(dist_m, path_loss_exp, spec: GeometrySpec) -> jnp.ndarray:
+    """Absolute received-power budget (dB, relative to transmit power).
+
+    Friis free-space loss up to ``spec.ref_dist`` at ``spec.carrier_freq``,
+    then the ``path_loss_exp`` power law beyond it — the standard
+    log-distance model radio planners use.  Diagnostics only: the
+    simulation gain (:func:`large_scale_gains`) is the *normalised* power
+    law, because composing the absolute budget (~ -90 dB at city scale)
+    with the paper's fixed-σ² MAC would leave nothing trainable to sweep.
+    """
+    d = jnp.maximum(jnp.asarray(dist_m, jnp.float32), 1e-3)
+    gamma = jnp.asarray(path_loss_exp, jnp.float32)
+    ref = jnp.float32(spec.ref_dist)
+    loss = fspl_db(ref, spec.carrier_freq) + 10.0 * gamma * jnp.log10(
+        jnp.maximum(d / ref, 1.0)
+    )
+    return jnp.float32(spec.bs_gain_db + spec.user_gain_db) - loss

@@ -4,6 +4,7 @@ All schedules satisfy the average-power constraint (1/T) sum_t P_t <= P_bar.
 Schedules are pure functions of (t, T, p_avg) so they can be evaluated inside
 jit (t traced) or on the host (numpy) when precomputing bit budgets.
 """
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -35,8 +36,9 @@ def power_at(t, total_steps: int, p_avg: float, schedule: str = "constant"):
 
 def schedule_array(total_steps: int, p_avg: float, schedule: str) -> np.ndarray:
     """Host-side P_t for t = 0..T-1 (used to precompute digital bit budgets)."""
-    return np.asarray([float(power_at(np.int64(t), total_steps, p_avg, schedule))
-                       for t in range(total_steps)], np.float64)
+    ts = range(total_steps)
+    ps = [float(power_at(np.int64(t), total_steps, p_avg, schedule)) for t in ts]
+    return np.asarray(ps, np.float64)
 
 
 def verify_average_power(ps: np.ndarray, p_avg: float, tol: float = 1e-6) -> bool:

@@ -1,0 +1,218 @@
+"""Subband scheduling: which devices transmit on which subband each round.
+
+The band-limited coordinated-descent line of work (arXiv:2102.07972) splits
+the bandwidth budget into ``n_subbands`` orthogonal subbands and lets a
+*scheduler* pick, each round, the subset of devices that transmit — one
+device per subband — instead of superposing everyone.  This module adds
+that layer on top of the MAC drivers (docs/DESIGN.md §12):
+
+* a :class:`Scheduler` is registered under a name
+  (:func:`register_scheduler`) and resolved from an ``OTAConfig`` via
+  :func:`get_scheduler` (``scheduler="none"`` resolves to ``None`` — no
+  scheduling op enters the traced program, preserving every pre-scheduling
+  golden byte-identically);
+* :func:`schedule` turns a scheduler's per-device priorities into the
+  round's transmit set as a **pure function of (key, t, gains, state)** —
+  no hidden state, so compiled runs stay one ``jit(lax.scan)`` and the
+  only carried piece is the proportional-fair average-rate vector, which
+  rides the scan carry (banked beside the error-feedback state in the
+  population engine);
+* ``n_subbands`` enters as a traced compare (``rank < n_subbands``, the
+  ``k_active`` pattern from repro.population), so subband-count grids ride
+  one vmapped program (``SCALAR_VMAP_AXES`` in repro.experiments.sweep);
+  the scheduler *kind* selects program structure and stays a static axis.
+
+Unscheduled devices are treated exactly like deep-faded ones: their frames
+never reach the MAC and their whole update banks into the error-feedback
+state (``Scheme.silent_state``), so scheduling composes with every scheme
+and fault model rather than special-casing any.
+
+Schedulers:
+
+``round_robin``  deterministic cycle: round t serves devices
+                 ``(t*S + j) mod M``; gains-blind, maximally fair.
+``gain_ranked``  picks the S devices with the largest received-power
+                 factors this round (post-geometry, post-fading) — the
+                 max-SNR policy; throughput-optimal, fairness-blind.
+``prop_fair``    classic proportional fairness: priority is the ratio of
+                 the instantaneous rate ``log1p(gain)`` to an
+                 exponentially-averaged served rate, carried across
+                 rounds with horizon ``pf_horizon`` — serves strong
+                 channels *when they are unusually strong for that
+                 device*, trading sum-rate for fairness.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+#: round-key salt for the scheduler draw (0 MAC AWGN, 1 encode, 2 channel,
+#: 3 availability, 4 cohort sampling, 5 straggler latency, 6 fault trace)
+SALT_SCHED = 7
+
+SCHEDULER_REGISTRY: Dict[str, Type["Scheduler"]] = {}
+
+
+def register_scheduler(name: str):
+    """Class decorator: register a Scheduler subclass under ``name``."""
+
+    def deco(cls: Type["Scheduler"]) -> Type["Scheduler"]:
+        cls.name = name
+        SCHEDULER_REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def registered_schedulers() -> Tuple[str, ...]:
+    """Every registered scheduler name (registration order)."""
+    return tuple(SCHEDULER_REGISTRY)
+
+
+def get_scheduler(cfg) -> Optional["Scheduler"]:
+    """Resolve ``cfg.scheduler`` through the registry.
+
+    ``"none"`` returns ``None`` — the static gate the engines test before
+    compiling any scheduling op in.  A real scheduler validates that the
+    subband budget is positive (``n_subbands`` is traced *data*, but a
+    grid whose every point schedules zero devices is a config error).
+    """
+    if cfg.scheduler == "none":
+        return None
+    try:
+        cls = SCHEDULER_REGISTRY[cfg.scheduler]
+    except KeyError:
+        raise KeyError(
+            f"unknown scheduler {cfg.scheduler!r}; registered: "
+            f"{', '.join(sorted(SCHEDULER_REGISTRY))}"
+        ) from None
+    if cfg.n_subbands < 1:
+        raise ValueError(
+            f"scheduler {cfg.scheduler!r} needs n_subbands >= 1; got "
+            f"{cfg.n_subbands}"
+        )
+    return cls(cfg)
+
+
+class Scheduler:
+    """Base scheduler: a priority rule plus (optional) carried state.
+
+    Subclasses override :meth:`priority` (higher = served first; the
+    :func:`schedule` helper turns priorities into the transmit set with a
+    traced ``rank < n_subbands`` cutoff) and — for stateful policies —
+    set ``has_state`` and override :meth:`init_state` / :meth:`update`.
+    State must be a single (m,) float32 vector: the engines carry it
+    through the scan (dense) or bank it beside the error state keyed by
+    device id (population), so one scalar per device is the contract.
+    """
+
+    name: str = "?"
+    has_state: bool = False
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init_state(self, m: int) -> jnp.ndarray:
+        """(m,) carried scheduler state (only read when ``has_state``)."""
+        return jnp.zeros((m,), jnp.float32)
+
+    def priority(self, key, t, gains, state, n_subbands) -> jnp.ndarray:
+        """(m,) per-device priority — pure in ``(key, t, gains, state)``.
+        ``n_subbands`` is the traced subband budget (most policies ignore
+        it; round_robin strides its cycle by it)."""
+        raise NotImplementedError
+
+    def update(self, state, gains, scheduled) -> jnp.ndarray:
+        """Next round's carried state (only called when ``has_state``)."""
+        return state
+
+
+@register_scheduler("round_robin")
+class RoundRobinScheduler(Scheduler):
+    """Deterministic cycle: round t serves devices ``(t*S + j) mod M``.
+
+    Realised as the priority ``-((idx - t*S) mod M)`` so the generic
+    rank-cutoff in :func:`schedule` selects exactly the cycle window —
+    ``S`` (``n_subbands``) stays traced data, rounded to the nearest
+    device count for the cycle arithmetic.
+    """
+
+    def priority(self, key, t, gains, state, n_subbands):
+        m = gains.shape[0]
+        s = jnp.round(jnp.asarray(n_subbands, jnp.float32))
+        offset = jnp.mod(jnp.asarray(t, jnp.float32) * s, m)
+        idx = jnp.arange(m, dtype=jnp.float32)
+        return -jnp.mod(idx - offset, m)
+
+
+@register_scheduler("gain_ranked")
+class GainRankedScheduler(Scheduler):
+    """Max-SNR: serve the S devices with the largest received-power
+    factors this round (post-geometry, post-fading)."""
+
+    def priority(self, key, t, gains, state, n_subbands):
+        return jnp.asarray(gains, jnp.float32)
+
+
+@register_scheduler("prop_fair")
+class PropFairScheduler(Scheduler):
+    """Proportional fairness over a carried average-rate state.
+
+    Priority is ``r_m / max(avg_m, eps)`` with the instantaneous rate
+    proxy ``r_m = log1p(gain_m)``; after the round the served average
+    updates as ``avg' = (1 - 1/tc) avg + (1/tc) r * scheduled`` with the
+    static horizon ``tc = cfg.pf_horizon``.  A device that keeps getting
+    served sees its average rise and its priority fall — the classic
+    fairness/throughput interpolation (tc -> 1 approaches round-robin-
+    like sharing, tc -> inf approaches max-SNR).
+    """
+
+    has_state = True
+    _EPS = 1e-6
+
+    def priority(self, key, t, gains, state, n_subbands):
+        rate = jnp.log1p(jnp.asarray(gains, jnp.float32))
+        return rate / jnp.maximum(state, self._EPS)
+
+    def update(self, state, gains, scheduled):
+        tc = jnp.float32(max(float(self.cfg.pf_horizon), 1.0))
+        rate = jnp.log1p(jnp.asarray(gains, jnp.float32))
+        served = rate * scheduled.astype(jnp.float32)
+        return (1.0 - 1.0 / tc) * state + served / tc
+
+
+def schedule(
+    scheduler: Scheduler,
+    key: jnp.ndarray,
+    t,
+    gains: jnp.ndarray,
+    n_subbands,
+    state: Optional[jnp.ndarray] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """One round's transmit set: ``(scheduled (m,) bool, new_state)``.
+
+    Ranks the scheduler's priorities (masked-out devices rank last: a
+    phantom or churned-out device must never occupy a subband) and admits
+    the top ``n_subbands`` — a traced compare, so the subband budget is a
+    vmappable sweep axis.  ``jnp.argsort`` is stable, so priority ties
+    break deterministically by device index and the result is bitwise
+    reproducible.  ``new_state`` is ``None`` for stateless schedulers;
+    callers own the masked-row keep-rule (a masked device's carried state
+    must not evolve), matching the deltas contract in ``round_masked``.
+    """
+    prio = scheduler.priority(key, t, gains, state, n_subbands)
+    if mask is not None:
+        prio = jnp.where(mask, prio, -jnp.inf)
+    order = jnp.argsort(-prio)
+    rank = jnp.argsort(order).astype(jnp.float32)
+    scheduled = rank < jnp.asarray(n_subbands, jnp.float32)
+    if mask is not None:
+        scheduled = scheduled & mask
+    new_state = (
+        scheduler.update(state, gains, scheduled) if scheduler.has_state else None
+    )
+    return scheduled, new_state

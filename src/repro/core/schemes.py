@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OTAConfig
-from repro.core import channel, compression, fading, power
+from repro.core import channel, compression, fading, geometry, power
 from repro.core.amp import amp_decode
 from repro.core.projection import DenseProjector, make_projector
 from repro.kernels import ops, ref
@@ -216,6 +216,14 @@ class Scheme:
         self.fading_rho = jnp.float32(cfg.fading_rho)
         #: run-level key anchoring the static / gauss_markov gain streams
         self.fading_key = fading.fading_base_key(cfg.seed)
+        # geometry / scheduling scalars: traced like the channel scalars
+        # above, so radius / path-loss / subband grids vmap on one program
+        # (SCALAR_VMAP_AXES in repro.experiments.sweep; docs/DESIGN.md §12)
+        self.cell_radius = jnp.float32(cfg.cell_radius)
+        self.path_loss_exp = jnp.float32(cfg.path_loss_exp)
+        self.n_subbands = jnp.float32(cfg.n_subbands)
+        #: run-level key anchoring the device placement (geometry axis)
+        self.geometry_key = geometry.geometry_base_key(cfg.seed)
         # robustness scalars: like the channel scalars above, these enter
         # the round as data, so fault/defence grids vmap on one program
         # (ROBUST_VMAP_AXES in repro.experiments.sweep); the *kinds*
@@ -282,21 +290,61 @@ class Scheme:
         """(received-power factor, participation mask) per device."""
         return jnp.ones((m,)), jnp.ones((m,), bool)
 
+    # --------------------------------------------------- geometry hooks
+    @property
+    def geometry_on(self) -> bool:
+        """Static gate for the geometry composition: with ``"none"`` no
+        geometry op enters the trace (pre-geometry goldens stay bitwise)."""
+        return self.cfg.geometry != "none"
+
+    @cached_property
+    def geometry_spec(self) -> geometry.GeometrySpec:
+        """Static cell-geometry description (placement model / antennas)."""
+        return geometry.spec_from_cfg(self.cfg)
+
+    def geometry_gains(self, m: int) -> jnp.ndarray:
+        """(m,) run-constant large-scale gains of the device placement —
+        pure in the run-level ``geometry_key``; ``cell_radius`` and
+        ``path_loss_exp`` are the traced scheme attributes, so
+        ``with_overrides`` vmaps whole radius / path-loss grids."""
+        return geometry.large_scale_gains(
+            self.geometry_key, m, self.cell_radius, self.path_loss_exp,
+            self.geometry_spec)
+
+    def small_scale_draw(self, key: jnp.ndarray, step, m: int,
+                         mask=None) -> ChannelDraw:
+        """The small-scale (fading/CSI) part of the round's realisation.
+
+        The base implementation wraps the legacy :meth:`device_factors`
+        pair; channel-aware schemes override *this* hook to add fading,
+        CSI error or PS-side combining — :meth:`channel_draw` then
+        composes the geometry layer on top, so every scheme inherits the
+        geometry axis without touching it.
+        """
+        p_factor, active = self.device_factors(key, m)
+        return ChannelDraw(p_factor, active)
+
     def channel_draw(self, key: jnp.ndarray, step, m: int,
                      mask=None) -> ChannelDraw:
         """One round's channel realisation (the driver-facing hook).
 
-        The base implementation wraps the legacy :meth:`device_factors`
-        pair; channel-aware schemes override this to add CSI error or
-        PS-side combining.  ``key`` is the fading-salted round key
-        (``fold_in(round_key, 2)``); ``step`` feeds the time-correlated
-        processes.  ``mask`` (optional, (m,) bool) marks which of the m
-        padded devices physically exist — per-device draws can ignore it
-        (masked frames are zeroed by the driver anyway), but draws that
-        couple devices (the blind PS combiner) must exclude phantom rows.
+        Composes the scheme's :meth:`small_scale_draw` with the run-
+        constant large-scale geometry gains (``p_factor *= g_m``, the
+        standard large-scale/small-scale factorisation) when the static
+        ``cfg.geometry`` gate is on; with geometry off this *is* the
+        small-scale draw — no extra op, bitwise the pre-geometry path.
+        ``key`` is the fading-salted round key (``fold_in(round_key,
+        2)``); ``step`` feeds the time-correlated processes.  ``mask``
+        (optional, (m,) bool) marks which of the m padded devices
+        physically exist — per-device draws can ignore it (masked frames
+        are zeroed by the driver anyway), but draws that couple devices
+        (the blind PS combiner) must exclude phantom rows.
         """
-        p_factor, active = self.device_factors(key, m)
-        return ChannelDraw(p_factor, active)
+        draw = self.small_scale_draw(key, step, m, mask=mask)
+        if self.geometry_on:
+            draw = draw._replace(
+                p_factor=draw.p_factor * self.geometry_gains(m))
+        return draw
 
     def cohort_channel_draw(self, key: jnp.ndarray, step,
                             cohort: jnp.ndarray, m_total: int,
@@ -621,7 +669,7 @@ class ADSGDFadingScheme(ADSGDScheme):
         h = channel.rayleigh_gains(key, m)
         return channel.truncated_inversion_power(h, self.fading_threshold)
 
-    def channel_draw(self, key, step, m, mask=None):
+    def small_scale_draw(self, key, step, m, mask=None):
         re, im = self.gains(key, step, m)
         h = fading.magnitude(re, im)
         p_factor, active = channel.truncated_inversion_power(
@@ -648,7 +696,7 @@ class ADSGDCSIErrScheme(ADSGDFadingScheme):
 
     csi = "noisy"
 
-    def channel_draw(self, key, step, m, mask=None):
+    def small_scale_draw(self, key, step, m, mask=None):
         re, im = self.gains(key, step, m)
         est_re, est_im = fading.csi_estimate(
             re, im, jax.random.fold_in(key, 3), self.csi_err_var)
@@ -679,7 +727,7 @@ class ADSGDBlindScheme(ADSGDScheme):
 
     csi = "none"
 
-    def channel_draw(self, key, step, m, mask=None):
+    def small_scale_draw(self, key, step, m, mask=None):
         k_ant = self.fading_spec.ps_antennas
         re, im = self.gains(key, step, m * k_ant)
         re, im = re.reshape(m, k_ant), im.reshape(m, k_ant)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OTAConfig
-from repro.core import channel
+from repro.core import channel, scheduling
 from repro.core import schemes as schemes_mod
 from repro.core.schemes import MACContext, Scheme, get_scheme, round_simulated
 from repro.local.work import (
@@ -97,7 +97,8 @@ class EngineRun:
 
 def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
                  step, key: jnp.ndarray, mask: jnp.ndarray, ctx: MACContext,
-                 *, dev_keys=None, draw=None, mac=None, fault=None):
+                 *, dev_keys=None, draw=None, mac=None, fault=None,
+                 sched=None):
     """:func:`~repro.core.schemes.round_simulated` with a traced device mask.
 
     ``mask`` (M_pad,) marks which padded devices exist at this grid point:
@@ -114,8 +115,12 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
     cohort view of a full-population draw), ``mac`` — a callable
     ``(frames, key, sigma2) -> y`` — replaces the flat analog MAC sum
     (hierarchical edge-site aggregation), and ``fault`` replaces the fault
-    realisation (the cohort view of a full-population trace).  Defaults
-    preserve the legacy path bitwise.
+    realisation (the cohort view of a full-population trace), and
+    ``sched`` — a (M_pad,) bool transmit set from the subband scheduler
+    (:mod:`repro.core.scheduling`) — restricts the round to the scheduled
+    devices: an unscheduled device is treated exactly like a deep-faded
+    one (its frame never reaches the MAC and its whole update banks via
+    ``Scheme.silent_state``).  Defaults preserve the legacy path bitwise.
 
     Fault injection (:mod:`repro.robust`, docs/DESIGN.md §10) is gated on
     the *static* ``scheme.robust_on``: Byzantine/stale gradients transform
@@ -142,6 +147,11 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
         # rows by 1.0, so the unmasked equivalence below still holds bitwise
         draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m_pad,
                                    mask=mask_b)
+    if sched is not None:
+        # the scheduler's transmit set composes like a deep fade: the
+        # frame is silenced and the analog silent_state banking below
+        # catches the unscheduled device (digital banking is explicit)
+        draw = draw._replace(active=draw.active & sched)
     robust = scheme.robust_on
     cfg = scheme.cfg
     true_grads = grads
@@ -196,6 +206,13 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
                 scheme.silent_state(true_grads, deltas, new_deltas),
                 new_deltas)
             active = active & ~fault.dropout & ~fault.erased
+        if sched is not None:
+            # an unscheduled digital device knows it was not granted a
+            # subband this round and banks its whole update (EF over the
+            # digital link, like a robust dropout that saw it coming)
+            new_deltas = jnp.where(
+                sched[:, None], new_deltas,
+                scheme.silent_state(true_grads, deltas, new_deltas))
         active = active & mask_b
         if cfg.aggregator != "mean":
             y = aggregators.robust_combine(
@@ -204,7 +221,8 @@ def round_masked(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
         else:
             # the literal sum (never the trimmed path at trim=0: a sorted
             # sum re-associates, which is not bitwise the same reduction)
-            frames = frames * (active if robust else mask_b)[:, None]
+            frames = frames * (active if (robust or sched is not None)
+                               else mask_b)[:, None]
             y = jnp.sum(frames, axis=0)
     # padded devices do not exist: their error state must not evolve
     new_deltas = jnp.where(mask_b[:, None], new_deltas, deltas)
@@ -248,6 +266,9 @@ class CompiledExperiment:
         self.params0 = params
         self.scheme = get_scheme(exp.cfg, self.d, m)
         self.localwork = get_local(exp.cfg, exp.local_lr)
+        # static gate: cfg.scheduler == "none" resolves to None and no
+        # scheduling op enters the trace (docs/DESIGN.md §12)
+        self.scheduler = scheduling.get_scheduler(exp.cfg)
         if not self.localwork.identity and exp.local_steps > 1:
             raise ValueError(
                 "local_steps > 1 (the legacy FedAvg path) conflicts with "
@@ -268,16 +289,27 @@ class CompiledExperiment:
                  jnp.zeros((self.m, self.d), jnp.float32))
         if self.localwork.has_dual:
             carry = carry + (self.localwork.init_dual(self.m, self.d),)
+        if self._sched_state:
+            carry = carry + (self.scheduler.init_state(self.m),)
         if self.exp.guard is not None:
             carry = carry + (guards.init_guard_state(),)
         return carry
+
+    @property
+    def _sched_state(self) -> bool:
+        """Whether a scheduler state vector rides the scan carry (after
+        the duals, before the guard state)."""
+        return self.scheduler is not None and self.scheduler.has_state
 
     def _round(self, sch: Scheme, lw: LocalWork, carry, t, key, mask):
         exp = self.exp
         params, opt_state, deltas, momenta = carry[:4]
         duals = carry[4] if lw.has_dual else None
+        sstate = (carry[4 + int(lw.has_dual)] if self._sched_state
+                  else None)
         gstate = carry[-1] if exp.guard is not None else None
-        old_extras = (deltas, momenta) + ((duals,) if lw.has_dual else ())
+        old_extras = ((deltas, momenta) + ((duals,) if lw.has_dual else ())
+                      + ((sstate,) if self._sched_state else ()))
         if lw.identity:
             # the pre-axis jaxpr, byte-for-byte — pins the goldens
             grads, momenta = device_grads(
@@ -293,7 +325,31 @@ class CompiledExperiment:
                 # evolve (same keep-rule round_masked applies to deltas)
                 duals = (new_duals if mask is None else
                          jnp.where((mask > 0)[:, None], new_duals, duals))
-        if mask is None and not sch.robust_on:
+        if self.scheduler is not None:
+            # the scheduler needs the round's received-power factors
+            # (post-geometry, post-fading) to rank, so the channel draw is
+            # evaluated here — the identical expression round_masked would
+            # have built (same salt, same mask) — and injected alongside
+            # the transmit set; round_masked folds ``sched`` into the
+            # active set so unscheduled devices bank via silent_state
+            rmask = (mask if mask is not None
+                     else jnp.ones((self.m,), jnp.float32))
+            rmask_b = rmask > 0
+            draw = sch.channel_draw(jax.random.fold_in(key, 2), t, self.m,
+                                    mask=rmask_b)
+            sched, new_sstate = scheduling.schedule(
+                self.scheduler,
+                jax.random.fold_in(key, scheduling.SALT_SCHED), t,
+                draw.p_factor, sch.n_subbands, state=sstate, mask=rmask_b)
+            if self._sched_state:
+                # phantom (masked-out) devices' carried scheduler state
+                # must not evolve — the deltas keep-rule
+                sstate = (new_sstate if mask is None else
+                          jnp.where(rmask_b, new_sstate, sstate))
+            ghat, deltas, met = round_masked(sch, grads, deltas, t, key,
+                                             rmask, self.ctx, draw=draw,
+                                             sched=sched)
+        elif mask is None and not sch.robust_on:
             ghat, deltas, met = round_simulated(sch, grads, deltas, t, key,
                                                 self.ctx)
         else:
@@ -303,7 +359,8 @@ class CompiledExperiment:
                      else jnp.ones((self.m,), jnp.float32))
             ghat, deltas, met = round_masked(sch, grads, deltas, t, key,
                                              rmask, self.ctx)
-        extras = (deltas, momenta) + ((duals,) if lw.has_dual else ())
+        extras = ((deltas, momenta) + ((duals,) if lw.has_dual else ())
+                  + ((sstate,) if self._sched_state else ()))
         if exp.guard is None:
             params, opt_state = self.opt.apply(params, self.unravel(ghat),
                                                opt_state)

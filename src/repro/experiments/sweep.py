@@ -17,9 +17,11 @@ vmapped axes (``VMAP_AXES``):
                                            (:func:`engine.round_masked`)
 
 plus the channel-model scalars (``SCALAR_VMAP_AXES``): ``csi_err_var``,
-``fading_threshold`` and ``fading_rho`` enter the round as one traced
-scalar each (a multiply or compare inside the scheme's channel draw), so a
-whole CSI-error / truncation / correlation grid rides one vmapped program.
+``fading_threshold``, ``fading_rho``, and the geometry/scheduling trio
+``cell_radius`` / ``path_loss_exp`` / ``n_subbands`` enter the round as one
+traced scalar each (a multiply or compare inside the scheme's channel draw
+or the subband cutoff), so a whole CSI-error / truncation / correlation /
+cell-size / subband-budget grid rides one vmapped program.
 The fault/robustness rates (``ROBUST_VMAP_AXES``) vmap the same way —
 sweeping one auto-promotes the config to ``robust=True`` so the (static)
 fault path is compiled in for the whole grid.
@@ -59,10 +61,15 @@ VMAP_AXES = ("p_avg", "power_schedule", "seed", "m_active")
 #: compare or multiply inside the channel draw) — vmapped like the schedule
 #: axes, but realised as a (G,) stack of per-point values swapped onto the
 #: scheme via ``with_overrides`` (the attribute of the same name, set by
-#: ``Scheme.__init__``).  docs/DESIGN.md §8 records why these three are
+#: ``Scheme.__init__``).  docs/DESIGN.md §8 records why these are
 #: data-like while ``fading_process`` / ``fading_window`` / ``ps_antennas``
-#: are structure-defining and stay static.
-SCALAR_VMAP_AXES = ("csi_err_var", "fading_threshold", "fading_rho")
+#: are structure-defining and stay static.  The geometry/scheduling trio
+#: (``cell_radius``, ``path_loss_exp``, ``n_subbands`` — DESIGN.md §12)
+#: follows the same rule: each is one multiply or compare on a fixed
+#: program, while ``geometry`` / ``scheduler`` select program structure
+#: and stay static axes.
+SCALAR_VMAP_AXES = ("csi_err_var", "fading_threshold", "fading_rho",
+                    "cell_radius", "path_loss_exp", "n_subbands")
 
 #: population knobs that enter the round as one traced scalar each
 #: (compares/multiplies inside the cohort mask and the site MAC), swapped

@@ -5,6 +5,7 @@ paper's §VI choice; the PS applies the optimizer to the *reconstructed*
 average gradient ghat (paper eq. `theta <- theta - eta ghat` generalises to
 any first-order update on ghat).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -26,15 +27,14 @@ class Optimizer:
     momentum: float = 0.9
     weight_decay: float = 0.0
     warmup_steps: int = 0
-    total_steps: int = 0          # 0 => constant LR after warmup
+    total_steps: int = 0  # 0 => constant LR after warmup
     grad_clip: float = 0.0
 
     # ------------------------------------------------------------------ state
     def init(self, params: Params) -> Params:
         zeros = lambda: jax.tree.map(jnp.zeros_like, params)  # noqa: E731
         if self.name == "adam":
-            return {"m": zeros(), "v": zeros(),
-                    "count": jnp.zeros((), jnp.int32)}
+            return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
         if self.name == "momentum":
             return {"m": zeros(), "count": jnp.zeros((), jnp.int32)}
         if self.name == "sgd":
@@ -50,20 +50,21 @@ class Optimizer:
         else:
             warm = 1.0
         if self.total_steps > 0:
-            frac = jnp.clip((step - self.warmup_steps)
-                            / max(self.total_steps - self.warmup_steps, 1),
-                            0.0, 1.0)
+            span = max(self.total_steps - self.warmup_steps, 1)
+            frac = jnp.clip((step - self.warmup_steps) / span, 0.0, 1.0)
             cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
         else:
             cos = 1.0
         return lr * warm * cos
 
     # ------------------------------------------------------------------ apply
-    def apply(self, params: Params, grads: Params, state: Params
-              ) -> Tuple[Params, Params]:
+    def apply(
+        self, params: Params, grads: Params, state: Params
+    ) -> Tuple[Params, Params]:
         if self.grad_clip > 0:
-            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                              for g in jax.tree.leaves(grads)))
+            leaves = jax.tree.leaves(grads)
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+            gn = jnp.sqrt(sq)
             scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-9))
             grads = jax.tree.map(lambda g: g * scale, grads)
         count = state["count"] + 1
@@ -72,13 +73,13 @@ class Optimizer:
 
         if self.name == "adam":
             b1, b2 = self.b1, self.b2
-            m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
-                             state["m"], grads)
-            v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
-                             state["v"], grads)
+            m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+            v = jax.tree.map(
+                lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+            )
             c = count.astype(jnp.float32)
-            mhat_s = 1.0 / (1 - b1 ** c)
-            vhat_s = 1.0 / (1 - b2 ** c)
+            mhat_s = 1.0 / (1 - b1**c)
+            vhat_s = 1.0 / (1 - b2**c)
 
             def upd(p, m_, v_):
                 step_ = m_ * mhat_s / (jnp.sqrt(v_ * vhat_s) + self.eps)
@@ -87,21 +88,21 @@ class Optimizer:
             new_params = jax.tree.map(upd, params, m, v)
             return new_params, {"m": m, "v": v, "count": count}
         if self.name == "momentum":
-            m = jax.tree.map(lambda m_, g: self.momentum * m_ + g,
-                             state["m"], grads)
-            new_params = jax.tree.map(
-                lambda p, m_: p - lr * (m_ + wd * p), params, m)
+            m = jax.tree.map(lambda m_, g: self.momentum * m_ + g, state["m"], grads)
+            new_params = jax.tree.map(lambda p, m_: p - lr * (m_ + wd * p), params, m)
             return new_params, {"m": m, "count": count}
         if self.name == "sgd":
-            new_params = jax.tree.map(lambda p, g: p - lr * (g + wd * p),
-                                      params, grads)
+            new_params = jax.tree.map(lambda p, g: p - lr * (g + wd * p), params, grads)
             return new_params, {"count": count}
         raise ValueError(self.name)
 
 
 def make_optimizer(train_cfg) -> Optimizer:
-    return Optimizer(name=train_cfg.optimizer, lr=train_cfg.lr,
-                     weight_decay=train_cfg.weight_decay,
-                     warmup_steps=train_cfg.warmup_steps,
-                     total_steps=train_cfg.total_steps,
-                     grad_clip=train_cfg.grad_clip)
+    return Optimizer(
+        name=train_cfg.optimizer,
+        lr=train_cfg.lr,
+        weight_decay=train_cfg.weight_decay,
+        warmup_steps=train_cfg.warmup_steps,
+        total_steps=train_cfg.total_steps,
+        grad_clip=train_cfg.grad_clip,
+    )

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OTAConfig
+from repro.core import scheduling
 from repro.core.schemes import MACContext, Scheme, get_scheme
 from repro.data.partition import PopulationPartition
 from repro.experiments.engine import (
@@ -119,7 +120,7 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
                      key: jnp.ndarray, ctx: MACContext, m_total: int, *,
                      gains=None, sites=None, n_sites: int = 1,
                      site_noise_scale=1.0, backhaul_sigma2=0.0,
-                     site_trim_frac: float = 0.0):
+                     site_trim_frac: float = 0.0, draw=None, sched=None):
     """One sampled-cohort aggregation round.
 
     cohort: (K,) sorted device ids; mask: (K,) 0/1 participation (churn,
@@ -135,13 +136,20 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
     the hierarchical two-stage sum.  All injections degrade bitwise to the
     dense driver at K == M with the defaults (identity gather, gains 1.0,
     flat MAC).
+
+    ``draw`` / ``sched`` pre-empt the channel realisation and inject a
+    subband-scheduler transmit set (``CompiledPopulation`` evaluates the
+    cohort draw itself so the scheduler can rank the round's gains; a
+    caller-supplied ``draw`` must already include any large-scale
+    ``gains`` composition — the in-place multiply is skipped).
     """
     deltas = gather_cohort(banks, cohort)
     dev_keys = jax.random.split(jax.random.fold_in(key, 1), m_total)[cohort]
-    draw = scheme.cohort_channel_draw(jax.random.fold_in(key, 2), step,
-                                      cohort, m_total, mask=mask > 0)
-    if gains is not None:
-        draw = draw._replace(p_factor=draw.p_factor * gains)
+    if draw is None:
+        draw = scheme.cohort_channel_draw(jax.random.fold_in(key, 2), step,
+                                          cohort, m_total, mask=mask > 0)
+        if gains is not None:
+            draw = draw._replace(p_factor=draw.p_factor * gains)
     fault = None
     if scheme.robust_on:
         # the cohort's rows of the full-population fault trace — a K < M
@@ -164,7 +172,8 @@ def population_round(scheme: Scheme, banks: BankedState, cohort: jnp.ndarray,
     ghat, new_deltas, metrics = round_masked(scheme, grads, deltas, step,
                                              key, mask, ctx,
                                              dev_keys=dev_keys, draw=draw,
-                                             mac=mac, fault=fault)
+                                             mac=mac, fault=fault,
+                                             sched=sched)
     banks = scatter_cohort(banks, cohort, new_deltas)
     metrics["cohort_frac"] = jnp.sum(mask) / cohort.shape[0]
     return ghat, banks, metrics
@@ -235,6 +244,14 @@ class CompiledPopulation:
             cap = pop.capacity if pop.capacity else pop.m_total
             self.dual_banks0 = init_banks(cap, min(pop.bank_size, cap),
                                           self.d, jnp.float32)
+        # proportional-fair average-rate state: one scalar per device,
+        # banked exactly like the duals (cold slot reads 0 == fresh device)
+        self.scheduler = scheduling.get_scheduler(exp.cfg)
+        self.sched_banks0 = None
+        if self._sched_state:
+            cap = pop.capacity if pop.capacity else pop.m_total
+            self.sched_banks0 = init_banks(cap, min(pop.bank_size, cap),
+                                           1, jnp.float32)
         # traced per-round knobs — vmappable via with_overrides
         self.avail_rate = jnp.float32(pop.avail_rate)
         self.straggler_deadline = jnp.float32(pop.straggler_deadline)
@@ -254,11 +271,17 @@ class CompiledPopulation:
         return new
 
     # ------------------------------------------------------------- pieces
+    @property
+    def _sched_state(self) -> bool:
+        return self.scheduler is not None and self.scheduler.has_state
+
     def _carry0(self):
         carry = (self.params0, self.opt.init(self.params0),
                  self.pstate0.banks)
         if self.localwork.has_dual:
             carry = carry + (self.dual_banks0,)
+        if self._sched_state:
+            carry = carry + (self.sched_banks0,)
         if self.exp.guard is not None:
             carry = carry + (guards.init_guard_state(),)
         return carry
@@ -266,8 +289,11 @@ class CompiledPopulation:
     def _round(self, sch: Scheme, lw: LocalWork, carry, t, key):
         params, opt_state, banks = carry[:3]
         dual_banks = carry[3] if lw.has_dual else None
+        sched_banks = (carry[3 + int(lw.has_dual)] if self._sched_state
+                       else None)
         gstate = carry[-1] if self.exp.guard is not None else None
-        old_extras = (banks,) + ((dual_banks,) if lw.has_dual else ())
+        old_extras = ((banks,) + ((dual_banks,) if lw.has_dual else ())
+                      + ((sched_banks,) if self._sched_state else ()))
         exp, pop, ps = self.exp, self.exp.pop, self.pstate0
         avail = churn.availability(ps.arrival, ps.departure, t,
                                    jax.random.fold_in(key, SALT_AVAIL),
@@ -299,14 +325,36 @@ class CompiledPopulation:
                 # value, claiming the slot with unchanged contents
                 new_duals = jnp.where(mask[:, None], new_duals, duals)
                 dual_banks = scatter_cohort(dual_banks, cohort, new_duals)
+        draw = sched = None
+        if self.scheduler is not None:
+            # evaluate the cohort draw here so the scheduler ranks this
+            # round's effective gains (same salted key population_round
+            # would use — XLA sees one draw either way)
+            draw = sch.cohort_channel_draw(jax.random.fold_in(key, 2), t,
+                                           cohort, pop.m_total, mask=mask)
+            draw = draw._replace(p_factor=draw.p_factor * ps.gains[cohort])
+            sstate = (gather_cohort(sched_banks, cohort)[:, 0]
+                      if self._sched_state else None)
+            sched, new_sstate = scheduling.schedule(
+                self.scheduler,
+                jax.random.fold_in(key, scheduling.SALT_SCHED), t,
+                draw.p_factor, sch.n_subbands, state=sstate, mask=mask)
+            if self._sched_state:
+                # masked cohort rows keep their banked average (the dual
+                # keep-rule); live-but-unscheduled rows decay — that decay
+                # IS proportional fairness
+                new_sstate = jnp.where(mask, new_sstate, sstate)
+                sched_banks = scatter_cohort(sched_banks, cohort,
+                                             new_sstate[:, None])
         ghat, banks, met = population_round(
             sch, banks, cohort, mask.astype(jnp.float32), grads, t, key,
             self.ctx, pop.m_total, gains=ps.gains[cohort],
             sites=ps.site[cohort], n_sites=pop.n_sites,
             site_noise_scale=self.site_noise_scale,
             backhaul_sigma2=self.backhaul_sigma2,
-            site_trim_frac=pop.site_trim_frac)
-        extras = (banks,) + ((dual_banks,) if lw.has_dual else ())
+            site_trim_frac=pop.site_trim_frac, draw=draw, sched=sched)
+        extras = ((banks,) + ((dual_banks,) if lw.has_dual else ())
+                  + ((sched_banks,) if self._sched_state else ()))
         if exp.guard is not None:
             params, opt_state, extras, gstate, loss, gmet = (
                 guards.guarded_step(

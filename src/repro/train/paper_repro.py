@@ -126,6 +126,11 @@ def run_federated(x_dev: np.ndarray, y_dev: np.ndarray,
     flat0, unravel = jax.flatten_util.ravel_pytree(params)
     d = flat0.shape[0]
     scheme = get_scheme(ota, d, m)
+    if ota.scheduler != "none":
+        raise ValueError(
+            "subband scheduling needs carried scheduler state; the looped "
+            "reference driver has none — use run_compiled/run_population "
+            f"for scheduler={ota.scheduler!r}")
     lw = get_local(ota, local_lr)
     if not lw.identity and local_steps > 1:
         raise ValueError(

@@ -39,6 +39,15 @@ PARITY_CASES = {
                                      s_frac=0.5, k_frac=0.25, p_avg=500.0,
                                      total_steps=10, projection="dense",
                                      amp_iters=10, mean_removal_steps=2),
+    # geometry ON over Rayleigh fading: pins the large-scale gain composition
+    # (repro.core.geometry, DESIGN.md §12); geometry OFF cases above are the
+    # bitwise no-op reference
+    "a_dsgd_geometry": OTAConfig(scheme="a_dsgd", s_frac=0.5, k_frac=0.25,
+                                 p_avg=500.0, total_steps=10,
+                                 projection="dense", amp_iters=10,
+                                 mean_removal_steps=2, fading="rayleigh",
+                                 fading_threshold=0.9, geometry="disk",
+                                 cell_radius=500.0, path_loss_exp=3.0),
     "d_dsgd": OTAConfig(scheme="d_dsgd", s_frac=0.5, p_avg=500.0,
                         total_steps=10),
     "signsgd": OTAConfig(scheme="signsgd", s_frac=0.5, p_avg=500.0,

@@ -1,0 +1,69 @@
+"""benchmarks/common.py edges: the CSV contract every figure script and
+benchmarks/run.py parse by position (``figure,series,step,acc`` rows and
+``(name, us_per_call, final_acc)`` summary triples)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import common  # noqa: E402
+
+M, B, DIM = 4, 32, 24
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    from repro.data.synthetic import federated_split, make_classification
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=400, n_test=120, dim=DIM, noise=2.0, seed=3)
+    xd, yd = federated_split(xtr, ytr, m=M, b=B, iid=True, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+def test_sweep_series_csv_schema_stable(tiny_data):
+    """Rows are exactly ``fig,series,step,acc`` with 4-decimal accuracy,
+    one per eval point per grid point; summary triples are
+    ``(fig_series, us_per_call, final_acc)`` — the shape run.py and the
+    CI plots consume."""
+    dev, test = tiny_data
+    rows = []
+    steps = 6
+    res, summary = common.sweep_series(
+        "figX", dev, test, {"seed": [0, 1]},
+        lambda rec: f"s{rec['seed']}", rows=rows, steps=steps,
+        scheme="ideal")
+    n_evals = len(res.records[0]["accs"])
+    assert len(rows) == 2 * n_evals
+    for row in rows:
+        fig, series, step, acc = row.split(",")
+        assert fig == "figX" and series in ("s0", "s1")
+        assert 0 <= int(step) <= steps - 1
+        assert acc == f"{float(acc):.4f}"        # fixed 4-decimal format
+    # eval steps clamp to the last round, never past it
+    assert int(rows[n_evals - 1].split(",")[2]) == steps - 1
+    assert [name for name, _, _ in summary] == ["figX_s0", "figX_s1"]
+    for _, us, final in summary:
+        assert us > 0 and 0.0 <= final <= 1.0
+
+
+def test_sweep_series_scheme_axis_names_series(tiny_data):
+    dev, test = tiny_data
+    rows = []
+    _, summary = common.sweep_series(
+        "figY", dev, test, {"scheme": ["ideal", "d_dsgd"]},
+        lambda rec: rec["scheme"], rows=rows, steps=4)
+    assert {n for n, _, _ in summary} == {"figY_ideal", "figY_d_dsgd"}
+    assert {r.split(",")[1] for r in rows} == {"ideal", "d_dsgd"}
+
+
+def test_emit_prints_header_then_rows(capsys):
+    common.emit(["f,s,0,0.5000"])
+    out = capsys.readouterr().out.splitlines()
+    assert out == ["figure,series,step,test_accuracy", "f,s,0,0.5000"]
+
+
+def test_ota_rejects_unknown_scheme():
+    with pytest.raises(KeyError, match="unknown scheme"):
+        common.ota("not_a_scheme")

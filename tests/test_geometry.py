@@ -1,0 +1,392 @@
+"""Geometry channel model + subband scheduling (DESIGN.md §12).
+
+Acceptance bar: geometry/scheduling OFF is *bitwise* the pre-axis code
+(pinned by the committed goldens, which predate the axis); geometry ON is
+pinned by its own golden; the scheduler layer is tested against its policy
+contracts (cycle coverage, top-S selection, proportional-fair state), and
+the compiled/population engines against the dense round with the axis at
+its identity point.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OTAConfig
+from repro.core import geometry, scheduling
+from repro.core.schemes import get_scheme, round_simulated
+from repro.data.synthetic import federated_split, make_classification
+from repro.experiments import run_compiled, run_sweep
+from repro.population import (
+    PopulationConfig, PopulationData, run_population,
+)
+from repro.experiments.sweep import run_population_sweep
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tests.golden.parity_cases import PARITY_CASES  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "simulated_parity.npz")
+D, M = 256, 6
+STEPS = 6
+
+
+def _cfg(**kw):
+    base = dict(scheme="a_dsgd", s_frac=0.5, k_frac=0.25, p_avg=500.0,
+                total_steps=10, projection="dense", amp_iters=10,
+                mean_removal_steps=2, fading="rayleigh",
+                fading_threshold=0.9)
+    base.update(kw)
+    return OTAConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    (xtr, ytr), (xte, yte) = make_classification(
+        n_train=800, n_test=300, dim=48, noise=2.0, seed=3)
+    xd, yd = federated_split(xtr, ytr, m=M, b=64, iid=True, seed=0)
+    return (xd, yd), (xte, yte)
+
+
+# ---------------------------------------------------------------------------
+# geometry math
+# ---------------------------------------------------------------------------
+
+
+def test_unit_positions_area_uniform_in_disk():
+    """r = sqrt(U) puts devices area-uniformly in the unit disk: all radii
+    <= 1 and E[r^2] = 1/2 (uniform area measure), not E[r] = 1/2."""
+    r, theta = geometry.unit_positions(jax.random.PRNGKey(0), 4000)
+    r, theta = np.asarray(r), np.asarray(theta)
+    assert r.max() <= 1.0 and r.min() >= 0.0
+    assert np.mean(r ** 2) == pytest.approx(0.5, abs=0.02)
+    assert theta.min() >= 0.0 and theta.max() <= 2 * np.pi
+
+
+def test_distances_bounded_by_radius_and_mast():
+    spec = geometry.GeometrySpec(bs_height=10.0)
+    d = np.asarray(geometry.device_distances(
+        jax.random.PRNGKey(1), 1000, jnp.float32(500.0), spec))
+    assert d.min() >= spec.bs_height            # never closer than the mast
+    assert d.max() <= np.hypot(500.0, spec.bs_height) + 1e-3
+
+
+def test_gains_decrease_with_radius_and_exponent():
+    """Larger cells and steeper path loss both weaken the median link."""
+    key = jax.random.PRNGKey(2)
+    spec = geometry.GeometrySpec()
+    med = lambda radius, gamma: float(np.median(np.asarray(
+        geometry.large_scale_gains(key, 500, jnp.float32(radius),
+                                   jnp.float32(gamma), spec))))
+    assert med(100.0, 3.0) > med(400.0, 3.0) > med(1600.0, 3.0)
+    assert med(1600.0, 2.0) > med(1600.0, 3.0) > med(1600.0, 4.0)
+
+
+def test_gain_is_antenna_product_at_reference_distance():
+    """At d == ref_dist the normalised power law is exactly the antenna
+    gains — the (d/d0)^-gamma factor is 1."""
+    spec = geometry.GeometrySpec(bs_gain_db=5.0, user_gain_db=1.0,
+                                 ref_dist=100.0, bs_height=100.0)
+    # cell_radius -> 0 pins every distance at bs_height == ref_dist
+    g = np.asarray(geometry.large_scale_gains(
+        jax.random.PRNGKey(3), 8, jnp.float32(1e-6), jnp.float32(3.0), spec))
+    np.testing.assert_allclose(g, 10.0 ** 0.6, rtol=1e-5)
+
+
+def test_link_budget_diagnostics_monotone():
+    spec = geometry.GeometrySpec(carrier_freq=915e6)
+    near = float(geometry.link_budget_db(jnp.float32(100.0), 3.0, spec))
+    far = float(geometry.link_budget_db(jnp.float32(1000.0), 3.0, spec))
+    assert far < near                            # more loss further out
+    f1 = float(geometry.fspl_db(jnp.float32(1000.0), 915e6))
+    f2 = float(geometry.fspl_db(jnp.float32(1000.0), 2 * 915e6))
+    assert f2 == pytest.approx(f1 + 20 * np.log10(2), abs=1e-3)
+
+
+def test_geometry_key_is_run_level_and_seeded():
+    k0 = geometry.geometry_base_key(0)
+    k1 = geometry.geometry_base_key(1)
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+    g0 = geometry.large_scale_gains(k0, M, jnp.float32(500.0),
+                                    jnp.float32(3.0), geometry.GeometrySpec())
+    g0b = geometry.large_scale_gains(k0, M, jnp.float32(500.0),
+                                     jnp.float32(3.0), geometry.GeometrySpec())
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g0b))
+
+
+def test_spec_from_cfg_validates_kind():
+    with pytest.raises(ValueError, match="geometry"):
+        geometry.spec_from_cfg(_cfg(geometry="torus"))
+    spec = geometry.spec_from_cfg(_cfg(geometry="disk", bs_gain_db=7.0))
+    assert spec.bs_gain_db == 7.0
+
+
+# ---------------------------------------------------------------------------
+# scheme composition: bitwise off, multiplicative on
+# ---------------------------------------------------------------------------
+
+
+def test_geometry_off_channel_draw_is_small_scale_draw():
+    """geometry='none' compiles no gain op: the base channel_draw returns
+    the small-scale draw object untouched (bitwise, all schemes)."""
+    for scheme in ("a_dsgd", "a_dsgd_csi_err", "a_dsgd_blind"):
+        sch = get_scheme(_cfg(scheme=scheme, csi_err_var=0.25,
+                              ps_antennas=16), D, M)
+        key = jax.random.PRNGKey(5)
+        a = sch.channel_draw(key, 0, M)
+        b = sch.small_scale_draw(key, 0, M)
+        np.testing.assert_array_equal(np.asarray(a.p_factor),
+                                      np.asarray(b.p_factor))
+        np.testing.assert_array_equal(np.asarray(a.active),
+                                      np.asarray(b.active))
+
+
+def test_geometry_on_multiplies_p_factor():
+    sch = get_scheme(_cfg(geometry="disk", cell_radius=500.0), D, M)
+    key = jax.random.PRNGKey(5)
+    small = sch.small_scale_draw(key, 0, M)
+    full = sch.channel_draw(key, 0, M)
+    gains = sch.geometry_gains(M)
+    np.testing.assert_array_equal(
+        np.asarray(full.p_factor),
+        np.asarray(small.p_factor * gains))
+    # the transmit set is the small-scale truncation decision, unchanged
+    np.testing.assert_array_equal(np.asarray(full.active),
+                                  np.asarray(small.active))
+
+
+def test_geometry_golden_pinned():
+    """The committed a_dsgd_geometry golden reproduces bitwise."""
+    cfg = PARITY_CASES["a_dsgd_geometry"]
+    sch = get_scheme(cfg, D, M)
+    gold = np.load(GOLDEN)
+    grads = jnp.asarray(gold["grads"])
+    deltas = jnp.zeros((M, D), jnp.float32)
+    ghat, nd, _ = round_simulated(sch, grads, deltas, 0,
+                                  jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(ghat),
+                                  gold["a_dsgd_geometry__ghat"])
+    np.testing.assert_array_equal(np.asarray(nd),
+                                  gold["a_dsgd_geometry__deltas"])
+
+
+def test_cohort_draw_carries_geometry(data):
+    """cohort_channel_draw takes cohort rows of the full-M geometry-scaled
+    realisation — device identity, not cohort position, keys the gain."""
+    cfg = _cfg(geometry="disk", cell_radius=500.0)
+    sch = get_scheme(cfg, D, M)
+    key = jax.random.PRNGKey(5)
+    cohort = jnp.asarray([4, 1, 3])
+    full = sch.channel_draw(key, 0, M)
+    sub = sch.cohort_channel_draw(key, 0, cohort, M,
+                                  mask=jnp.ones((3,), bool))
+    np.testing.assert_array_equal(np.asarray(sub.p_factor),
+                                  np.asarray(full.p_factor)[[4, 1, 3]])
+
+
+# ---------------------------------------------------------------------------
+# scheduler contracts
+# ---------------------------------------------------------------------------
+
+
+def _sched(name, **kw):
+    return scheduling.get_scheduler(_cfg(scheduler=name, **kw))
+
+
+def test_registry_resolution():
+    assert scheduling.get_scheduler(_cfg(scheduler="none")) is None
+    assert set(scheduling.registered_schedulers()) == {
+        "round_robin", "gain_ranked", "prop_fair"}
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        scheduling.get_scheduler(_cfg(scheduler="magic"))
+    with pytest.raises(ValueError, match="n_subbands"):
+        scheduling.get_scheduler(_cfg(scheduler="round_robin", n_subbands=0))
+
+
+def test_round_robin_cycles_all_devices():
+    """S subbands/round: every device is served exactly once per M/S-round
+    cycle, in index order."""
+    s = _sched("round_robin", n_subbands=2)
+    gains = jnp.ones((M,))
+    served = []
+    for t in range(M // 2):
+        sel, _ = scheduling.schedule(s, jax.random.PRNGKey(t), t, gains,
+                                     jnp.float32(2.0))
+        assert int(np.sum(np.asarray(sel))) == 2
+        served.extend(np.flatnonzero(np.asarray(sel)).tolist())
+    assert sorted(served) == list(range(M))
+
+
+def test_gain_ranked_picks_top_s():
+    s = _sched("gain_ranked", n_subbands=3)
+    gains = jnp.asarray([0.1, 5.0, 0.3, 4.0, 0.2, 3.0])
+    sel, _ = scheduling.schedule(s, jax.random.PRNGKey(0), 0, gains,
+                                 jnp.float32(3.0))
+    np.testing.assert_array_equal(np.asarray(sel),
+                                  [False, True, False, True, False, True])
+
+
+def test_prop_fair_state_decays_priority_of_served():
+    """A device served every round sees its average rise and its priority
+    fall below an equally-strong never-served device."""
+    s = _sched("prop_fair", n_subbands=1, pf_horizon=4.0)
+    gains = jnp.asarray([2.0, 2.0])
+    state = s.init_state(2)
+    sel, state = scheduling.schedule(s, jax.random.PRNGKey(0), 0, gains,
+                                     jnp.float32(1.0), state=state)
+    first = int(np.flatnonzero(np.asarray(sel))[0])
+    sel2, state2 = scheduling.schedule(s, jax.random.PRNGKey(1), 1, gains,
+                                       jnp.float32(1.0), state=state)
+    second = int(np.flatnonzero(np.asarray(sel2))[0])
+    assert second != first                       # fairness alternates
+    assert float(state[first]) > float(state[1 - first])
+    assert float(state2[second]) > 0.0
+
+
+def test_schedule_masked_devices_never_serve():
+    s = _sched("gain_ranked", n_subbands=4)
+    gains = jnp.asarray([9.0, 8.0, 7.0, 1.0, 0.5, 0.1])
+    mask = jnp.asarray([False, False, True, True, True, True])
+    sel, _ = scheduling.schedule(s, jax.random.PRNGKey(0), 0, gains,
+                                 jnp.float32(4.0), mask=mask)
+    sel = np.asarray(sel)
+    assert not sel[0] and not sel[1]             # masked: never scheduled
+    np.testing.assert_array_equal(sel[2:], [True, True, True, True])
+
+
+def test_n_subbands_is_traced_vmappable():
+    """One trace serves a whole subband-budget grid (the k_active rank
+    pattern): vmapping over n_subbands matches per-value calls."""
+    s = _sched("gain_ranked")
+    gains = jax.random.uniform(jax.random.PRNGKey(0), (M,))
+    budgets = jnp.asarray([1.0, 3.0, 5.0])
+
+    def one(nsb):
+        sel, _ = scheduling.schedule(s, jax.random.PRNGKey(1), 0, gains, nsb)
+        return sel
+
+    batched = jax.vmap(one)(budgets)
+    for i, nsb in enumerate(budgets):
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(one(nsb)))
+        assert int(np.sum(np.asarray(batched[i]))) == int(nsb)
+
+
+def test_schedule_deterministic_tie_break():
+    """Equal priorities break by device index (stable argsort) — bitwise
+    reproducible across calls."""
+    s = _sched("gain_ranked", n_subbands=2)
+    gains = jnp.ones((M,))
+    sel, _ = scheduling.schedule(s, jax.random.PRNGKey(0), 0, gains,
+                                 jnp.float32(2.0))
+    np.testing.assert_array_equal(np.asarray(sel),
+                                  [True, True, False, False, False, False])
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_full_budget_schedule_is_identity(data):
+    """scheduler ON with n_subbands == M schedules everyone: bitwise the
+    unscheduled run (the scheduler branch routes through round_masked,
+    which is pinned bitwise-equal to round_simulated at the all-ones
+    mask)."""
+    (xd, yd), (xte, yte) = data
+    base = run_compiled(xd, yd, xte, yte, _cfg(total_steps=STEPS),
+                        steps=STEPS, eval_every=2)
+    full = run_compiled(xd, yd, xte, yte,
+                        _cfg(total_steps=STEPS, scheduler="gain_ranked",
+                             n_subbands=M),
+                        steps=STEPS, eval_every=2)
+    np.testing.assert_array_equal(np.asarray(base.accs),
+                                  np.asarray(full.accs))
+
+
+def test_compiled_scheduler_restricts_transmit_set(data):
+    (xd, yd), (xte, yte) = data
+    run = run_compiled(xd, yd, xte, yte,
+                       _cfg(total_steps=STEPS, scheduler="round_robin",
+                            n_subbands=2),
+                       steps=STEPS, eval_every=2)
+    # active_frac counts the post-schedule transmit set
+    assert max(m["active_frac"] for m in run.metrics) <= 2 / M + 1e-6
+
+
+def test_run_federated_rejects_scheduler(data):
+    from repro.train.paper_repro import run_federated
+    (xd, yd), (xte, yte) = data
+    with pytest.raises(ValueError, match="scheduler"):
+        run_federated(np.asarray(xd), np.asarray(yd), xte, yte,
+                      _cfg(scheduler="round_robin"), steps=2)
+
+
+def test_population_full_cohort_matches_dense_with_scheduler(data):
+    """K == M population with prop_fair (banked state) reproduces the
+    dense engine (carried state) bitwise — the banked-vs-carried PF
+    average is the same vector when every slot is hot."""
+    (xd, yd), (xte, yte) = data
+    cfg = _cfg(total_steps=STEPS, geometry="disk", cell_radius=500.0,
+               scheduler="prop_fair", n_subbands=2)
+    dense = run_compiled(xd, yd, xte, yte, cfg, steps=STEPS, eval_every=2)
+    popr = run_population(PopulationData.from_dense(xd, yd), xte, yte, cfg,
+                          PopulationConfig(m_total=M, k_cohort=M),
+                          steps=STEPS, eval_every=2)
+    np.testing.assert_array_equal(np.asarray(dense.accs),
+                                  np.asarray(popr.accs))
+
+
+def test_population_sampled_cohort_scheduler_runs(data):
+    (xd, yd), (xte, yte) = data
+    cfg = _cfg(total_steps=STEPS, geometry="disk", cell_radius=800.0,
+               scheduler="prop_fair", n_subbands=2)
+    run = run_population(PopulationData.from_dense(xd, yd), xte, yte, cfg,
+                         PopulationConfig(m_total=M, k_cohort=4,
+                                          capacity=4, bank_size=2),
+                         steps=STEPS, eval_every=2)
+    assert np.all(np.isfinite(np.asarray(run.accs)))
+
+
+# ---------------------------------------------------------------------------
+# sweep axes
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_geometry_axes_vmapped_match_single_runs(data):
+    """cell_radius / n_subbands ride the vmapped trace; each grid point is
+    bitwise its standalone compiled run."""
+    (xd, yd), (xte, yte) = data
+    base = _cfg(total_steps=STEPS, geometry="disk",
+                scheduler="gain_ranked")
+    res = run_sweep((xd, yd), (xte, yte), base,
+                    {"cell_radius": [200.0, 900.0], "n_subbands": [2, 4]},
+                    steps=STEPS, eval_every=2)
+    assert len(res.records) == 4
+    for rec in res.records:
+        cfg = _cfg(total_steps=STEPS, geometry="disk",
+                   scheduler="gain_ranked",
+                   cell_radius=rec["cell_radius"],
+                   n_subbands=int(rec["n_subbands"]))
+        solo = run_compiled(xd, yd, xte, yte, cfg, steps=STEPS,
+                            eval_every=2)
+        np.testing.assert_array_equal(np.asarray(rec["accs"]),
+                                      np.asarray(solo.accs))
+
+
+def test_population_sweep_scheduler_static_axis(data):
+    (xd, yd), (xte, yte) = data
+    res = run_population_sweep(
+        PopulationData.from_dense(xd, yd), (xte, yte),
+        _cfg(total_steps=STEPS, geometry="disk"),
+        PopulationConfig(m_total=M, k_cohort=M),
+        {"scheduler": ["round_robin", "gain_ranked"],
+         "cell_radius": [300.0, 1200.0]},
+        steps=STEPS, eval_every=2)
+    assert len(res.records) == 4
+    assert {r["scheduler"] for r in res.records} == {"round_robin",
+                                                     "gain_ranked"}
+    assert all(np.all(np.isfinite(r["accs"])) for r in res.records)

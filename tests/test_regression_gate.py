@@ -44,6 +44,21 @@ def test_strict_fails_when_nothing_matches():
     assert compare({"entries": []}, renamed, strict=True) == 0
 
 
+def test_sweep_baseline_key_absent_from_fresh_warns_and_skips(capsys):
+    """A baseline timing with no counterpart in a fresh BENCH file (a
+    figure was renamed or not rerun) is skipped with a WARNING, not
+    failed — and the skip doesn't satisfy --strict on its own."""
+    fresh = {"a_dsgd_us_per_round": 110.0}
+    assert compare(SWEEPS, fresh) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "d_dsgd_us_per_round" in out
+    # strict still passes: one real comparison happened
+    assert compare(SWEEPS, fresh, strict=True) == 0
+    # ...but a fresh file with *only* unmatched keys fails strict
+    assert compare(SWEEPS, {"brand_new_us_per_round": 1.0},
+                   strict=True) == 1
+
+
 def test_main_parses_strict_flag(tmp_path):
     base = os.path.join(tmp_path, "base.json")
     fresh = os.path.join(tmp_path, "fresh.json")

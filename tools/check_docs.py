@@ -1,0 +1,139 @@
+"""Docs cross-reference checker (the CI ``docs-check`` leg).
+
+Verifies, with zero third-party dependencies:
+
+1. every ``DESIGN.md §N`` citation — in Python docstrings/comments and
+   in the docs themselves — names a section heading that actually exists
+   in docs/DESIGN.md (same for bare ``§N`` references *inside*
+   DESIGN.md);
+2. every relative markdown link ``[text](path#anchor)`` in README.md and
+   docs/*.md points at a file that exists, and, when an anchor is given,
+   at a heading whose GitHub slug matches;
+3. every ``docs/<name>.md`` path mentioned anywhere in the source tree
+   exists (catches doc renames leaving dangling docstring pointers).
+
+Exit status 0 when everything resolves; 1 with one line per violation.
+
+Usage:
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: trees scanned for citations (source + docs; build junk has no docs)
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools", "docs")
+SCAN_MD = ("README.md", "ROADMAP.md", "CHANGES.md")
+
+SECTION_RE = re.compile(r"^##+\s+§(\d+(?:\.\d+)?)\b", re.M)
+#: `DESIGN.md §N` with optional path prefix / backtick / paren clutter
+CITE_RE = re.compile(r"DESIGN\.md[`)\s]{0,3}§\s*(\d+(?:\.\d+)?)")
+#: bare §N inside DESIGN.md itself (digits only: the paper's own Roman
+#: §II–§IV citations are not ours to resolve)
+BARE_RE = re.compile(r"§(\d+(?:\.\d+)?)")
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+DOCPATH_RE = re.compile(r"\bdocs/([\w.\-]+\.md)\b")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    slug = re.sub(r"[^\w\- ]", "", heading.strip().lower())
+    return slug.replace(" ", "-")
+
+
+def md_headings(path: str):
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    in_code = False
+    heads = []
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        elif not in_code and re.match(r"^#{1,6}\s", line):
+            heads.append(line.lstrip("#").strip())
+    return heads
+
+
+def iter_files():
+    for rel in SCAN_MD:
+        path = os.path.join(REPO, rel)
+        if os.path.exists(path):
+            yield path
+    for d in SCAN_DIRS:
+        for root, _dirs, files in os.walk(os.path.join(REPO, d)):
+            for name in sorted(files):
+                if name.endswith((".py", ".md")):
+                    yield os.path.join(root, name)
+
+
+def main() -> int:
+    errors = []
+    design_path = os.path.join(REPO, "docs", "DESIGN.md")
+    with open(design_path, encoding="utf-8") as fh:
+        design_text = fh.read()
+    sections = set(SECTION_RE.findall(design_text))
+    if not sections:
+        errors.append("docs/DESIGN.md: no '## §N' headings found at all")
+
+    slugs = {}  # md path -> set of heading slugs
+
+    def slugs_of(path):
+        if path not in slugs:
+            slugs[path] = {github_slug(h) for h in md_headings(path)}
+        return slugs[path]
+
+    for path in iter_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+
+        # 1. DESIGN.md §N citations resolve
+        refs = set(CITE_RE.findall(text))
+        if rel == os.path.join("docs", "DESIGN.md"):
+            refs |= set(BARE_RE.findall(text))
+        for ref in sorted(refs):
+            if ref not in sections:
+                errors.append(
+                    f"{rel}: cites DESIGN.md §{ref} but docs/DESIGN.md has "
+                    f"no '## §{ref}' heading")
+
+        # 3. mentioned docs/*.md files exist
+        for name in set(DOCPATH_RE.findall(text)):
+            if not os.path.exists(os.path.join(REPO, "docs", name)):
+                errors.append(f"{rel}: mentions docs/{name}, which does "
+                              "not exist")
+
+        # 2. relative markdown links are live (md files only)
+        if not path.endswith(".md"):
+            continue
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            fpath, _, anchor = target.partition("#")
+            tpath = (os.path.normpath(
+                os.path.join(os.path.dirname(path), fpath))
+                if fpath else path)
+            if not os.path.exists(tpath):
+                errors.append(f"{rel}: link target {target!r} does not "
+                              "exist")
+                continue
+            if anchor and tpath.endswith(".md"):
+                if anchor not in slugs_of(tpath):
+                    errors.append(
+                        f"{rel}: anchor {target!r} matches no heading in "
+                        f"{os.path.relpath(tpath, REPO)}")
+
+    for err in errors:
+        print(f"docs-check: {err}")
+    print(f"docs-check: {'FAIL' if errors else 'OK'} "
+          f"({len(sections)} DESIGN.md sections)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
