@@ -16,7 +16,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_sweeps, convergence_bound,
+    from benchmarks import (bench_kernels, bench_llm, bench_sweeps,
+                            convergence_bound,
                             fig2_schemes, fig3_power_alloc, fig4_power_sweep,
                             fig5_bandwidth, fig6_devices, fig7_s_tradeoff,
                             fig8_bias, fig9_fading, fig10_scaling,
@@ -40,6 +41,7 @@ def main() -> None:
         "roofline": roofline.main,
         "kernels": bench_kernels.main,
         "sweeps": bench_sweeps.main,
+        "llm": bench_llm.main,
     }
     summary = []
     for name, fn in benches.items():

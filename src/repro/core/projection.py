@@ -13,22 +13,48 @@ Two realisations:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops, ref
 
+# Host-side cache of generated dense measurement matrices, keyed by
+# (seed, s_tilde, d).  Values are *numpy* arrays: an lru_cache of
+# jnp.ndarray pins (s_tilde x d) device buffers across sweeps and
+# backends (up to 8 full matrices of HBM leaked per multi-seed dense
+# sweep).  Host bytes are cheap; ``jnp.asarray`` on use re-devices to
+# whatever backend is current, and :func:`clear_dense_cache` frees
+# everything explicitly.
+_DENSE_CACHE: dict = {}
+_DENSE_CACHE_MAX = 8
 
-@functools.lru_cache(maxsize=8)
+
+def clear_dense_cache() -> None:
+    """Drop all cached dense measurement matrices (host copies)."""
+    _DENSE_CACHE.clear()
+
+
 def _dense_matrix(seed: int, s_tilde: int, d: int) -> jnp.ndarray:
-    """Concrete (never traced) shared measurement matrix; cached per shape."""
-    with jax.ensure_compile_time_eval():
-        key = jax.random.PRNGKey(seed)
-        return jax.random.normal(key, (s_tilde, d), jnp.float32) / jnp.sqrt(
-            jnp.float32(s_tilde))
+    """Concrete (never traced) shared measurement matrix; cached per shape.
+
+    Generation goes through jax.random so values are bitwise-identical to
+    the historical device-cached version; only the *storage* is host-side.
+    """
+    key_t = (int(seed), int(s_tilde), int(d))
+    host = _DENSE_CACHE.get(key_t)
+    if host is None:
+        with jax.ensure_compile_time_eval():
+            key = jax.random.PRNGKey(seed)
+            mat = jax.random.normal(key, (s_tilde, d), jnp.float32) / jnp.sqrt(
+                jnp.float32(s_tilde))
+        host = np.asarray(mat)
+        if len(_DENSE_CACHE) >= _DENSE_CACHE_MAX:
+            _DENSE_CACHE.pop(next(iter(_DENSE_CACHE)))
+        _DENSE_CACHE[key_t] = host
+    return jnp.asarray(host)
 
 
 @dataclass(frozen=True)

@@ -860,16 +860,19 @@ def round_sigma2(scheme: Scheme, draw: ChannelDraw):
     return scheme.cfg.sigma2 * draw.noise_scale
 
 
-def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
-                    step, key: jnp.ndarray,
-                    ctx: Optional[MACContext] = None):
-    """M devices on one host. grads/deltas: (M, d). Returns
-    ``(ghat, new_deltas, metrics)``; the MAC is a sum over the leading axis
-    (plus AWGN for analog schemes)."""
+def encode_round(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
+                 step, key: jnp.ndarray, ctx: MACContext):
+    """The device/channel half of :func:`round_simulated`: per-device
+    encode, channel gain, MAC superposition (+AWGN for analog schemes).
+
+    Returns ``(y, new_deltas, metrics, draw)`` — everything up to (but not
+    including) the PS-side ``scheme.decode``.  Splitting here is what lets
+    the streamed LLM driver (``train/fedllm.py``) double-buffer: while the
+    PS decodes chunk ``i-1``, the devices encode and transmit chunk ``i``.
+    ``round_simulated`` composes this with the decode, so the split is
+    bitwise-invisible to every existing driver and golden.
+    """
     m = grads.shape[0]
-    if ctx is None:
-        ctx = MACContext(m=scheme.m, fading=scheme.cfg.fading,
-                         csi=scheme.csi)
     dev_keys = jax.random.split(jax.random.fold_in(key, 1), m)
     draw = scheme.channel_draw(jax.random.fold_in(key, 2), step, m)
     active = draw.active
@@ -885,9 +888,23 @@ def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
                             round_sigma2(scheme, draw))
     else:
         y = jnp.sum(frames, axis=0)
+    return y, new_deltas, metrics, draw
+
+
+def round_simulated(scheme: Scheme, grads: jnp.ndarray, deltas: jnp.ndarray,
+                    step, key: jnp.ndarray,
+                    ctx: Optional[MACContext] = None):
+    """M devices on one host. grads/deltas: (M, d). Returns
+    ``(ghat, new_deltas, metrics)``; the MAC is a sum over the leading axis
+    (plus AWGN for analog schemes)."""
+    if ctx is None:
+        ctx = MACContext(m=scheme.m, fading=scheme.cfg.fading,
+                         csi=scheme.csi)
+    y, new_deltas, metrics, draw = encode_round(scheme, grads, deltas,
+                                                step, key, ctx)
     ghat = scheme.decode(y, step, ctx)
     metrics = {k: jnp.mean(v) for k, v in metrics.items()}
-    metrics["active_frac"] = jnp.mean(active.astype(jnp.float32))
+    metrics["active_frac"] = jnp.mean(draw.active.astype(jnp.float32))
     if draw.gain is not None:
         metrics["chan_gain"] = jnp.mean(draw.gain)
     if draw.noise_scale is not None:

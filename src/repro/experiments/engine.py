@@ -444,14 +444,21 @@ def run_checkpointed(ce, overrides, keys, *, checkpoint_dir: str,
                      stop_after_step=None):
     """Drive a compiled runner in checkpointed segments.
 
-    ``ce`` is a :class:`CompiledExperiment` (or any runner exposing
-    ``_carry0`` / ``run_segment``).  Every ``checkpoint_every`` rounds the
-    scan carry and the accumulated outputs are snapshotted via
-    ``train/checkpoint.py`` (atomic single-file replace); with
-    ``resume=True`` the run continues from the latest snapshot.  Because a
-    scan splits into segments as pure-function composition, the resumed
-    run is *bitwise-equal* to the uninterrupted one (pinned by
-    tests/test_robust.py).
+    ``ce`` is any runner satisfying the segment contract: ``carry0()``
+    (or legacy ``_carry0``) builds the initial scan carry, and
+    ``run_segment(overrides, keys, mask, carry, t0)`` scans rounds
+    ``t0 .. t0+len(keys)`` from an explicit carry, returning ``(carry,
+    outs)``.  :class:`CompiledExperiment`,
+    :class:`repro.population.CompiledPopulation` and
+    :class:`repro.train.fedllm.CompiledFedLLM` all implement it, so one
+    checkpoint driver serves the MNIST engines and the streamed-LLM loop
+    alike.  Every ``checkpoint_every`` rounds the scan carry and the
+    accumulated outputs are snapshotted via ``train/checkpoint.py``
+    (atomic single-file replace); with ``resume=True`` the run continues
+    from the latest snapshot.  Because a scan splits into segments as
+    pure-function composition, the resumed run is *bitwise-equal* to the
+    uninterrupted one (pinned by tests/test_robust.py and
+    tests/test_fedllm.py).
 
     ``stop_after_step`` simulates an interruption: the driver returns
     ``None`` after the first segment boundary at or past it (the snapshot
@@ -463,7 +470,7 @@ def run_checkpointed(ce, overrides, keys, *, checkpoint_dir: str,
     path = os.path.join(checkpoint_dir, "engine_ckpt.npz")
     from repro.train.checkpoint import load_checkpoint, save_checkpoint
 
-    carry = ce._carry0()
+    carry = (ce.carry0() if hasattr(ce, "carry0") else ce._carry0())
     t0 = 0
     chunks: List[Dict[str, Any]] = []
     if resume and os.path.exists(path):

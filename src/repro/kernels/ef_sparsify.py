@@ -26,17 +26,30 @@ def _kernel(tau_ref, g_ref, d_ref, sp_ref, nd_ref):
 
 
 def ef_sparsify_pallas(g: jnp.ndarray, delta: jnp.ndarray, tau: jnp.ndarray,
-                       tile: int = 1 << 16, interpret: bool = True):
-    """g, delta: (n,) float32; tau: scalar. Returns (g_sp, new_delta)."""
+                       tile: int = 1 << 16, interpret: bool | None = None):
+    """g, delta: (n,) float32; tau: scalar. Returns (g_sp, new_delta).
+
+    ``n`` is padded up to a multiple of ``tile`` and the outputs sliced
+    back — the tile never shrinks, so a prime-length gradient launches
+    ceil(n/tile) programs, not n.  The pad lanes are pure zeros (0 + 0
+    compared against tau >= 0 stays 0 in both outputs), so padding is
+    value-exact for the real lanes.  ``interpret=None`` resolves lazily
+    per call to the same backend detection as :mod:`repro.kernels.ops`
+    (which imports this module, hence the local check).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     (n,) = g.shape
     tile = min(tile, n)
-    while n % tile:
-        tile -= 1
-    grid = (n // tile,)
+    pad = (-n) % tile
+    n_pad = n + pad
+    grid = (n_pad // tile,)
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1)
-    out_shape = (jax.ShapeDtypeStruct((n,), jnp.float32),
-                 jax.ShapeDtypeStruct((n,), jnp.float32))
-    return pl.pallas_call(
+    g_p = jnp.pad(g.astype(jnp.float32), (0, pad))
+    d_p = jnp.pad(delta.astype(jnp.float32), (0, pad))
+    out_shape = (jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+                 jax.ShapeDtypeStruct((n_pad,), jnp.float32))
+    sp, nd = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((1,), lambda i: (0,)),
@@ -46,4 +59,5 @@ def ef_sparsify_pallas(g: jnp.ndarray, delta: jnp.ndarray, tau: jnp.ndarray,
                    pl.BlockSpec((tile,), lambda i: (i,))),
         out_shape=out_shape,
         interpret=interpret,
-    )(tau_arr, g.astype(jnp.float32), delta.astype(jnp.float32))
+    )(tau_arr, g_p, d_p)
+    return sp[:n], nd[:n]

@@ -12,7 +12,7 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 _STACKED_ROOTS = ("blocks", "encoder")
@@ -51,3 +51,14 @@ def param_specs(params: Any, model_size: int, model_axis: str = "model"):
 
 def spec_tree_like(tree: Any, spec) -> Any:
     return jax.tree.map(lambda _: spec, tree)
+
+
+def named_sharding_tree(mesh, specs: Any) -> Any:
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``.
+
+    The one-liner every jit caller was writing inline (serve, trainer,
+    fedllm); ``is_leaf`` is pinned to PartitionSpec so the map stays
+    correct even on jax versions where P registers as a pytree node.
+    """
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

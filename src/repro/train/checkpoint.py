@@ -102,13 +102,20 @@ def save_checkpoint(path: str, state: Any, step: int = 0) -> None:
     os.replace(tmp, path)
 
 
-def load_checkpoint(path: str):
+def load_checkpoint(path: str, shardings=None):
     """Returns ``(state, step)``; ``step`` is always the saved python int
     (0 for files written before the ``meta`` block existed).
 
     The step is read from the raw npz entry, not the rebuilt pytree —
     ``_unflatten`` routes leaves through ``jnp.asarray``, which truncates
     int64 to int32 under the default x64-disabled config.
+
+    ``shardings`` (optional) is a pytree of shardings matching the saved
+    state: leaves are ``device_put`` straight onto their placement so a
+    resumed serve/train loop never round-trips a replicated copy through
+    the default device (the fedllm mid-sweep resume path).  Its structure
+    must match the *restored* tree (post npz round-trip, so tuples where
+    NamedTuples were).
     """
     with np.load(path) as f:
         flat = {k: f[k] for k in f.files}
@@ -116,5 +123,9 @@ def load_checkpoint(path: str):
     tree = _unflatten(flat)
     if isinstance(tree, dict):
         tree.pop("meta", None)
-        return tree.get("state", tree), step
+        tree = tree.get("state", tree)
+    if shardings is not None:
+        import jax
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                            shardings)
     return tree, step

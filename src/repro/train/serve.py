@@ -4,6 +4,14 @@ OTA-DSGD is a training-time technique; serving has no gradient aggregation
 (docs/DESIGN.md §5), so serve steps are plain jit with declarative shardings:
 params over 'model', batch over the data axes, KV caches over
 (batch -> data, heads-or-seq -> model).
+
+Serve-while-train (docs/DESIGN.md §5, docs/EXPERIMENTS.md): the streamed
+federated trainer (``train/fedllm.py``) hands each round's decoded global
+params to :meth:`ServeStep.publish` — a jitted identity with
+``out_shardings`` pinned to the serve placement and the input donated, so
+the swap is a device-side relayout (an alias when the trainer already
+produced the serve layout) with no host round-trip.  ``decode_fn`` keeps
+answering requests against whichever published tree the caller holds.
 """
 from __future__ import annotations
 
@@ -13,11 +21,11 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
-from repro.sharding.specs import param_specs
+from repro.sharding.specs import named_sharding_tree, param_specs
 from repro.train.trainer import abstract_params
 
 
@@ -46,12 +54,24 @@ class ServeStep:
     param_sharding: Any
     cache_sharding: Any
     decode_fn: Any          # jit'd (params, cache, token, pos) -> logits, cache
-    prefill_fn: Any = None
+    prefill_fn: Any = None  # jit'd (params, cache, tokens) -> logits, cache
+    publish_fn: Any = None  # jit'd identity onto param_sharding (donated)
 
     def init_cache(self, dtype=jnp.bfloat16):
         return model_lib.init_decode_cache(self.arch, self.batch,
                                            self.max_len, dtype,
                                            self.decode_window)
+
+    def publish(self, params):
+        """Swap a freshly decoded global param tree into the serve layout.
+
+        The input is donated: when the trainer already produced the serve
+        sharding (the single-mesh fedllm loop) this is a pure buffer alias;
+        otherwise XLA reshards device-to-device.  Either way no host copy.
+        The caller must treat its argument as consumed and serve from the
+        returned tree.
+        """
+        return self.publish_fn(params)
 
 
 def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
@@ -63,8 +83,8 @@ def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
     model_size = axis_sizes.get("model", 1)
     aparams = abstract_params(arch)
     pspecs = param_specs(aparams, model_size)
-    ns = lambda s: NamedSharding(mesh, s)                  # noqa: E731
-    param_sh = jax.tree.map(ns, pspecs)
+    ns = lambda s: named_sharding_tree(mesh, s)            # noqa: E731
+    param_sh = ns(pspecs)
 
     acache = jax.eval_shape(
         lambda: model_lib.init_decode_cache(arch, batch, max_len,
@@ -76,13 +96,7 @@ def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
                   if batch % max(int(np.prod([axis_sizes[a] for a in data_axes])), 1) == 0
                   and len(data_axes) else P())
 
-    enc_sh = None
-    extra = {}
-    if arch.encoder is not None:
-        extra["enc_out"] = jax.ShapeDtypeStruct(
-            (batch, arch.encoder.n_frames, arch.encoder.d_model),
-            compute_dtype)
-        enc_sh = tok_spec  # batch over data
+    enc_sh = tok_spec if arch.encoder is not None else None  # batch over data
 
     def decode(params, cache, token, pos, *args):
         enc_out = args[0] if args else None
@@ -91,12 +105,37 @@ def make_serve_step(arch: ArchConfig, mesh, batch: int, max_len: int,
             compute_dtype=compute_dtype, decode_window=decode_window)
         return logits, new_cache
 
+    def prefill(params, cache, tokens, *args):
+        # scan one decode step per prompt position: arch-generic (every
+        # model family defines decode_step; the batched-forward fast path
+        # is a per-family optimisation this contract leaves open) and one
+        # compile regardless of prompt length
+        enc_out = args[0] if args else None
+
+        def body(cache, i):
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            logits, cache = model_lib.decode_step(
+                params, arch, tok, cache, i, enc_out=enc_out,
+                compute_dtype=compute_dtype, decode_window=decode_window)
+            return cache, logits
+        cache, logits = jax.lax.scan(body, cache,
+                                     jnp.arange(tokens.shape[1]))
+        return logits[-1], cache
+
     in_sh = [param_sh, cache_sh, tok_spec, ns(P())]
+    pre_sh = [param_sh, cache_sh, tok_spec]
     if arch.encoder is not None:
         in_sh.append(enc_sh)
+        pre_sh.append(enc_sh)
     decode_fn = jax.jit(decode, in_shardings=tuple(in_sh),
                         out_shardings=(None, cache_sh),
                         donate_argnums=(1,))
+    prefill_fn = jax.jit(prefill, in_shardings=tuple(pre_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+    publish_fn = jax.jit(lambda p: p, out_shardings=param_sh,
+                         donate_argnums=(0,))
     return ServeStep(arch=arch, mesh=mesh, batch=batch, max_len=max_len,
                      decode_window=decode_window, param_sharding=param_sh,
-                     cache_sharding=cache_sh, decode_fn=decode_fn)
+                     cache_sharding=cache_sh, decode_fn=decode_fn,
+                     prefill_fn=prefill_fn, publish_fn=publish_fn)

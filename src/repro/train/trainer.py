@@ -40,7 +40,7 @@ from repro.core.schemes import MACContext, get_scheme
 from repro.models import model as model_lib
 from repro.optim.optim import make_optimizer
 from repro.sharding import constrain, shard_map
-from repro.sharding.specs import param_specs
+from repro.sharding.specs import named_sharding_tree, param_specs
 
 
 def _pad_multiple(d: int, m: int) -> int:
@@ -50,6 +50,26 @@ def _pad_multiple(d: int, m: int) -> int:
 def abstract_params(cfg: ArchConfig):
     return jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
                           jax.random.PRNGKey(0))
+
+
+def ravel_meta(aparams):
+    """``(d, unravel)`` for an abstract param tree: total parameter count
+    and the flat-vector -> pytree unraveller with a *stable leaf ordering*
+    (ravel_pytree's canonical flatten order — the contract the streamed
+    fedllm driver and the flat trainer layout both rely on: every device
+    and the PS agree on which gradient entry lands in which chunk).
+
+    The unraveller is built from an eval_shape tree via closure over
+    abstract zeros, so nothing d-sized is materialised here.
+    """
+    d = int(sum(int(np.prod(x.shape)) for x in jax.tree.leaves(aparams)))
+
+    def unravel(flat):
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aparams)
+        _, unr = jax.flatten_util.ravel_pytree(zeros)
+        return unr(flat)
+
+    return d, unravel
 
 
 @dataclasses.dataclass
@@ -95,7 +115,7 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
     n_shards = int(np.prod([axis_sizes[a] for a in auto_axes])) if auto_axes else 1
 
     aparams = abstract_params(arch)
-    d = int(sum(int(np.prod(x.shape)) for x in jax.tree.leaves(aparams)))
+    d, unravel = ravel_meta(aparams)
     pad_unit = (ota.block_size * n_shards if ota.projection == "blocked"
                 else max(n_shards, 1))
     d_pad = _pad_multiple(d, max(pad_unit, 1))
@@ -162,8 +182,8 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
     # jit-level batch sharding also spreads over auto data-like axes
     batch_jit_spec = P(ota_axes + tuple(a for a in auto_axes if a != "model"))
     ns = lambda s: NamedSharding(mesh, s)                       # noqa: E731
-    param_sh = jax.tree.map(ns, pspecs)
-    opt_sh = jax.tree.map(ns, ospecs)
+    param_sh = named_sharding_tree(mesh, pspecs)
+    opt_sh = named_sharding_tree(mesh, ospecs)
     delta_sh = ns(delta_spec_full)
     rep = lambda t: jax.tree.map(lambda _: P(), t)              # noqa: E731
 
@@ -192,14 +212,9 @@ def make_train_step(arch: ArchConfig, train_cfg: TrainConfig, ota: OTAConfig,
             ghat = ghat_s.reshape(d_pad)
             ghat = jax.lax.with_sharding_constraint(
                 ghat, ns(P(auto_axes) if auto_axes else P()))
-            _, unravel = jax.flatten_util.ravel_pytree(aparams_like())
             ghat_tree = unravel(ghat[:d])
             params, opt_state = opt.apply(params, ghat_tree, opt_state)
             return params, opt_state, new_delta, {**metrics, **agg_metrics}
-
-        def aparams_like():
-            return jax.tree.map(
-                lambda s: jnp.zeros(s.shape, s.dtype), aparams)
 
         in_sh = (param_sh, opt_sh, delta_sh,
                  jax.tree.map(lambda _: ns(batch_jit_spec), batch_tree),
@@ -369,8 +384,8 @@ def make_train_step_sliced(arch: ArchConfig, train_cfg: TrainConfig,
     ospecs = {k: (pspecs if k in ("m", "v") else P())
               for k in jax.eval_shape(opt.init, aparams)}
     ns = lambda s: NamedSharding(mesh, s)                   # noqa: E731
-    param_sh = jax.tree.map(ns, pspecs)
-    opt_sh = jax.tree.map(ns, ospecs)
+    param_sh = named_sharding_tree(mesh, pspecs)
+    opt_sh = named_sharding_tree(mesh, ospecs)
     rep = lambda t: jax.tree.map(lambda _: P(), t)          # noqa: E731
     batch_spec = P(ota_axes)
 

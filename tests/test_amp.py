@@ -75,3 +75,28 @@ def test_effective_noise_contracts_with_iters():
     errs = [float(jnp.linalg.norm(
         amp_decode_dense(y, proj.matrix(), iters=i) - x)) for i in (2, 8, 30)]
     assert errs[2] < errs[0]
+
+
+def test_dense_matrix_cache_is_host_side_and_clearable():
+    """The dense A cache must hold host (numpy) copies — not pin device
+    buffers across sweeps/backends — and regenerate bitwise after clear."""
+    from repro.core import projection as projection_mod
+    projection_mod.clear_dense_cache()
+    m1 = np.asarray(projection_mod._dense_matrix(11, 32, 64))
+    cached = projection_mod._DENSE_CACHE[(11, 32, 64)]
+    assert isinstance(cached, np.ndarray)          # host-side storage
+    m2 = np.asarray(projection_mod._dense_matrix(11, 32, 64))
+    np.testing.assert_array_equal(m1, m2)
+    projection_mod.clear_dense_cache()
+    assert not projection_mod._DENSE_CACHE
+    np.testing.assert_array_equal(
+        m1, np.asarray(projection_mod._dense_matrix(11, 32, 64)))
+
+
+def test_dense_matrix_cache_bounded():
+    from repro.core import projection as projection_mod
+    projection_mod.clear_dense_cache()
+    for seed in range(projection_mod._DENSE_CACHE_MAX + 3):
+        projection_mod._dense_matrix(seed, 4, 8)
+    assert len(projection_mod._DENSE_CACHE) <= projection_mod._DENSE_CACHE_MAX
+    projection_mod.clear_dense_cache()

@@ -76,3 +76,31 @@ def test_blocks_are_decorrelated():
     b = ref.block_matrix_ref(0, jnp.uint32(2), 64, 128)
     corr = float(jnp.abs(jnp.vdot(a, b)) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
     assert corr < 0.1
+
+
+@pytest.mark.parametrize("n,tile", [(10007, 1 << 10),   # prime n
+                                    (97, 8), (5, 16), (1023, 256)])
+def test_ef_sparsify_pads_odd_lengths(n, tile):
+    """Prime/odd n must pad up to the tile (ceil(n/tile) programs), not
+    degenerate to tile=1 (n programs); outputs sliced back, value-exact."""
+    from repro.kernels.ef_sparsify import ef_sparsify_pallas
+    g = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    d = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    tau = jnp.float32(0.5)
+    sp, nd = ef_sparsify_pallas(g, d, tau, tile=tile)
+    sr, dr = ref.ef_sparsify_ref(g, d, tau)
+    assert sp.shape == (n,) and nd.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(nd), np.asarray(dr))
+
+
+def test_ef_sparsify_lazy_interpret_default():
+    """interpret=None resolves per call from the live backend (CPU here),
+    matching ops.interpret_default — not a hardcoded import-time value."""
+    from repro.kernels.ef_sparsify import ef_sparsify_pallas
+    g = jax.random.normal(jax.random.PRNGKey(4), (64,))
+    d = jnp.zeros((64,))
+    sp, nd = ef_sparsify_pallas(g, d, jnp.float32(0.3))   # default None
+    sr, dr = ref.ef_sparsify_ref(g, d, jnp.float32(0.3))
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(sr))
+    assert ops.interpret_default() is True  # CPU test env
